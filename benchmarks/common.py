@@ -1,0 +1,73 @@
+"""Shared benchmark harness.
+
+Every benchmark emits CSV rows ``name,us_per_call,derived`` (the derived
+column carries the figure-specific quantity: final loss, AUC, comm MB,
+grad-norm, roofline seconds, ...). Budgets are sized for CPU (`--quick`
+shrinks them further for CI).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_optimizer
+from repro.data import ctr_batch_stacked, make_ctr_task
+from repro.models.deepfm import deepfm_logits, deepfm_loss, init_deepfm
+from repro.train import DecentralizedTrainer
+from repro.train.metrics import auc
+
+K = 8  # the paper's worker count
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """us per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+# ---------------------- the paper's CTR training setup ----------------------
+
+TASK = make_ctr_task(seed=0, n_fields=8, features_per_field=32)
+
+
+def ctr_iter(seed: int = 1, batch: int = 32) -> Iterator:
+    key = jax.random.PRNGKey(seed)
+    t = 0
+    while True:
+        yield ctr_batch_stacked(TASK, jax.random.fold_in(key, t), K, batch)
+        t += 1
+
+
+def train_ctr(kind: str, steps: int, *, log_every: int = 10, **kw
+              ) -> Tuple[Dict, float]:
+    """Returns (log dict, us_per_step)."""
+    opt = make_optimizer(kind, K=K, eta=1e-3, topology="ring", **kw)
+    trainer = DecentralizedTrainer(lambda p, b: deepfm_loss(p, b), opt)
+    params = init_deepfm(jax.random.PRNGKey(0), TASK.n_features,
+                         TASK.n_fields, hidden=(64, 64))
+    state = trainer.init(params)
+    t0 = time.perf_counter()
+    state, log = trainer.fit(state, ctr_iter(), steps, log_every=log_every)
+    us = (time.perf_counter() - t0) / steps * 1e6
+    avg = trainer.averaged_params(state)
+    test = ctr_batch_stacked(TASK, jax.random.PRNGKey(999), K, 256)
+    flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), test)
+    scores = deepfm_logits(avg, flat["feat_ids"])
+    test_auc = auc(np.asarray(scores), np.asarray(flat["label"]))
+    return {"log": log, "auc": test_auc}, us

@@ -1,0 +1,20 @@
+"""Fig. 2 / Fig. 5: test metric (AUC) vs communication cost (MB).
+Claim: larger p reaches the same AUC at ~1/p the bytes."""
+from benchmarks.common import emit, train_ctr
+
+
+def main(steps: int = 150) -> None:
+    base_mb = None
+    for p in (1, 4, 16):
+        out, us = train_ctr("d-adam", steps, period=p)
+        mb = out["log"].comm_mb[-1]
+        if base_mb is None:
+            base_mb = mb
+        emit(f"fig2/d-adam_p{p}_auc", us, f"{out['auc']:.4f}")
+        emit(f"fig2/d-adam_p{p}_comm_mb", us, f"{mb:.2f}")
+    emit("fig2/comm_reduction_p16_vs_p1", 0.0,
+         f"{base_mb / max(mb, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Fig. 3: CD-Adam training loss vs iterations (sign compression,
+gamma=0.4) — converges to ~the same value as full-precision vanilla."""
+from benchmarks.common import emit, train_ctr
+
+
+def main(steps: int = 150) -> None:
+    ref, us_v = train_ctr("d-adam", steps, period=1)
+    emit("fig3/d-adam-vanilla_final_loss", us_v,
+         f"{ref['log'].loss[-1]:.4f}")
+    for p in (2, 8):
+        out, us = train_ctr("cd-adam", steps, period=p, gamma=0.4,
+                            compressor="sign")
+        emit(f"fig3/cd-adam_p{p}_final_loss", us,
+             f"{out['log'].loss[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

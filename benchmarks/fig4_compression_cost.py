@@ -1,0 +1,20 @@
+"""Fig. 4 / Fig. 6: CD-Adam vs D-Adam test metric per communication MB.
+Claim: with both skipping (p=16) AND sign compression, CD-Adam's bytes are
+a small fraction of even D-Adam p=16, at matched AUC."""
+from benchmarks.common import emit, train_ctr
+
+
+def main(steps: int = 150) -> None:
+    d16, us_d = train_ctr("d-adam", steps, period=16)
+    c16, us_c = train_ctr("cd-adam", steps, period=16, gamma=0.4,
+                          compressor="sign")
+    emit("fig4/d-adam_p16_auc", us_d, f"{d16['auc']:.4f}")
+    emit("fig4/d-adam_p16_comm_mb", us_d, f"{d16['log'].comm_mb[-1]:.3f}")
+    emit("fig4/cd-adam_p16_auc", us_c, f"{c16['auc']:.4f}")
+    emit("fig4/cd-adam_p16_comm_mb", us_c, f"{c16['log'].comm_mb[-1]:.3f}")
+    ratio = d16["log"].comm_mb[-1] / max(c16["log"].comm_mb[-1], 1e-9)
+    emit("fig4/bytes_reduction_cd_vs_d", 0.0, f"{ratio:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

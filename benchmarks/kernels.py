@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks.
+
+On CPU the Pallas kernels run in interpret mode (not representative of TPU
+wall time), so we report BOTH: interpret-mode correctness deltas vs ref, and
+the XLA-path timings that ARE meaningful on this host (fused-vs-unfused
+Adam, chunked-vs-naive attention) as the derived column."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+from repro.models.attention import flash_attention_xla, sdpa
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # fused adam: XLA-jitted ref (fused by XLA on CPU too) as baseline
+    n = 1 << 20
+    p = jax.random.normal(key, (n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    ref_fn = jax.jit(lambda p, g, m, v: ref.fused_adam_ref(
+        p, g, m, v, eta=1e-3, beta1=0.9, beta2=0.999, tau=1e-6))
+    us = time_fn(ref_fn, p, g, m, v)
+    emit("kernels/adam_ref_1M", us, f"{n * 4 * 7 / (us / 1e6) / 1e9:.1f}GB/s")
+    po, _, _ = ops.fused_adam(p[:8192], g[:8192], m[:8192], v[:8192],
+                              eta=1e-3)
+    pr, _, _ = ref.fused_adam_ref(p[:8192], g[:8192], m[:8192], v[:8192],
+                                  eta=1e-3, beta1=0.9, beta2=0.999, tau=1e-6)
+    emit("kernels/fused_adam_interpret_maxerr", 0.0,
+         f"{float(jnp.max(jnp.abs(po - pr))):.2e}")
+
+    # sign compress
+    x = jax.random.normal(key, (1 << 18,))
+    hat = jnp.zeros_like(x)
+    ref_fn = jax.jit(lambda x, h: ref.sign_compress_ref(x, h))
+    us = time_fn(ref_fn, x, hat)
+    emit("kernels/sign_compress_ref_256k", us, "int8+scale wire")
+    q, s, hn = ops.sign_compress(x[:8192], hat[:8192])
+    qr, sr, hnr = ref.sign_compress_ref(x[:8192], hat[:8192])
+    emit("kernels/sign_compress_interpret_maxerr", 0.0,
+         f"{float(jnp.max(jnp.abs(hn - hnr))):.2e}")
+
+    # attention: chunked (flash-in-XLA) vs naive on a 2k sequence
+    B, S, Hq, Hk, D = 1, 2048, 8, 2, 64
+    q_ = jax.random.normal(key, (B, S, Hq, D), jnp.float32)
+    k_ = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hk, D))
+    v_ = jax.random.normal(jax.random.fold_in(key, 3), (B, S, Hk, D))
+    naive = jax.jit(lambda q, k, v: sdpa(q, k, v, causal=True, impl="naive"))
+    chunk = jax.jit(lambda q, k, v: flash_attention_xla(
+        q, k, v, causal=True, chunk_q=512, chunk_kv=512))
+    us_n = time_fn(naive, q_, k_, v_, iters=3)
+    us_c = time_fn(chunk, q_, k_, v_, iters=3)
+    emit("kernels/attn_naive_2k", us_n, "materializes S^2")
+    emit("kernels/attn_chunked_2k", us_c,
+         f"{us_n / us_c:.2f}x vs naive (CPU)")
+    out_c = chunk(q_, k_, v_)
+    out_n = naive(q_, k_, v_)
+    emit("kernels/attn_chunked_maxerr", 0.0,
+         f"{float(jnp.max(jnp.abs(out_c.reshape(out_n.shape) - out_n))):.2e}")
+
+    # rwkv: pallas interpret vs lax.scan ref on a small shape
+    B, S, H, Dh = 1, 256, 4, 64
+    ks = [jax.random.fold_in(key, 10 + i) for i in range(5)]
+    r_ = jax.random.normal(ks[0], (B, S, H, Dh)) * 0.3
+    kk = jax.random.normal(ks[1], (B, S, H, Dh)) * 0.3
+    vv = jax.random.normal(ks[2], (B, S, H, Dh)) * 0.3
+    ww = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, Dh)))
+    uu = jax.random.normal(ks[4], (H, Dh)) * 0.1
+    s0 = jnp.zeros((B, H, Dh, Dh))
+    scan_fn = jax.jit(lambda *a: ref.rwkv_scan_ref(*a))
+    us = time_fn(scan_fn, r_, kk, vv, ww, uu, s0, iters=3)
+    emit("kernels/wkv_scan_ref_256", us, "lax.scan per-step state HBM RT")
+    y, sf = ops.rwkv_scan(r_, kk, vv, ww, uu, s0, chunk=64)
+    yr, sfr = ref.rwkv_scan_ref(r_, kk, vv, ww, uu, s0)
+    emit("kernels/wkv_interpret_maxerr", 0.0,
+         f"{float(jnp.max(jnp.abs(y - yr))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section
+Roofline reads from here). One row per (arch x shape) on the single-pod
+mesh: the three terms in seconds, the bottleneck, and the usefulness
+ratio MODEL_FLOPS / HLO_FLOPs."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.analysis.roofline import from_artifact
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def main() -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*_1616.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if art.get("skipped") or art.get("tag"):
+            continue
+        r = from_artifact(art)
+        rows.append(r)
+        emit(f"roofline/{r.arch}/{r.shape}", 0.0,
+             f"Tc={r.t_compute:.3e};Tm={r.t_memory:.3e};"
+             f"Tcoll={r.t_collective:.3e};bound={r.bottleneck};"
+             f"useful={r.usefulness:.2f}")
+    if not rows:
+        emit("roofline/NO_ARTIFACTS", 0.0,
+             "run: python -m repro.launch.dryrun --all first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark driver: one section per paper table/figure + the roofline and
+kernel microbenchmarks. Prints ``name,us_per_call,derived`` CSV."""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    steps = 40 if args.quick else 150
+
+    from benchmarks import (fig1_dadam_convergence, fig2_comm_cost,
+                            fig3_cdadam_convergence, fig4_compression_cost,
+                            heterogeneity, kernels, roofline, speedup,
+                            topology_ablation, vision_resnet)
+
+    benches = {
+        "fig1": lambda: fig1_dadam_convergence.main(steps),
+        "fig2": lambda: fig2_comm_cost.main(steps),
+        "fig3": lambda: fig3_cdadam_convergence.main(steps),
+        "fig4": lambda: fig4_compression_cost.main(steps),
+        "vision": lambda: vision_resnet.main(max(20, steps // 3)),
+        "speedup": lambda: speedup.main(max(30, steps // 2)),
+        "topology": lambda: topology_ablation.main(max(40, steps // 2)),
+        "heterogeneity": lambda: heterogeneity.main(max(40, steps // 2)),
+        "kernels": kernels.main,
+        "roofline": roofline.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = []
+    for name in chosen:
+        try:
+            benches[name]()
+        except Exception as e:  # noqa: BLE001 — report-all driver
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

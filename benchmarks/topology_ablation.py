@@ -1,0 +1,45 @@
+"""Remark 1 ablation: the spectral gap rho only affects higher-order terms
+when p is moderate — but consensus error scales ~1/rho (Lemma 1).
+
+We train the same DeepFM task over ring / exponential / fully-connected
+topologies (rho: ring < exp < full = 1) and report final loss (should be
+~equal — the leading 1/sqrt(KT) term dominates) and consensus error
+(should order inversely with rho — Lemma 1's (1 + 4/rho^2) factor)."""
+import jax
+
+from benchmarks.common import TASK, emit, ctr_iter
+from repro.core import make_optimizer, make_topology
+from repro.models.deepfm import deepfm_loss, init_deepfm
+from repro.train import DecentralizedTrainer
+
+K = 8
+
+
+def main(steps: int = 120) -> None:
+    results = {}
+    for topo_name in ("ring", "exponential", "fully_connected"):
+        opt = make_optimizer("d-adam", K=K, eta=1e-3, period=4,
+                             topology=topo_name)
+        trainer = DecentralizedTrainer(lambda p, b: deepfm_loss(p, b), opt)
+        params = init_deepfm(jax.random.PRNGKey(0), TASK.n_features,
+                             TASK.n_fields, hidden=(64, 64))
+        state = trainer.init(params)
+        state, log = trainer.fit(state, ctr_iter(), steps, log_every=steps)
+        rho = opt.topo.spectral_gap
+        results[topo_name] = (rho, log.loss[-1], log.consensus[-1])
+        emit(f"topology/{topo_name}_rho", 0.0, f"{rho:.3f}")
+        emit(f"topology/{topo_name}_final_loss", 0.0,
+             f"{log.loss[-1]:.4f}")
+        emit(f"topology/{topo_name}_consensus", 0.0,
+             f"{log.consensus[-1]:.3e}")
+    # Remark 1: leading-term losses match across rho at moderate p
+    losses = [v[1] for v in results.values()]
+    emit("topology/loss_spread_across_rho", 0.0,
+         f"{max(losses) - min(losses):.4f}")
+    # Lemma 1: better-connected graphs keep workers closer
+    emit("topology/consensus_ring_over_full", 0.0,
+         f"{results['ring'][2] / max(results['fully_connected'][2], 1e-12):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""The paper's first experiment analogue: ResNet20 on CIFAR-shaped images
+(synthetic class-conditional data), D-Adam vs vanilla vs CD-Adam — training
+loss + accuracy per communication MB (the paper's Fig. 1a / 2a panel).
+
+Hyperparameters per Section 6.1: eta=1e-3, weight decay 1e-4, 8 workers,
+ring. Scaled down: width-8 ResNet20, small batches, synthetic data."""
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import make_optimizer
+from repro.data import image_batch_stacked
+from repro.models.deepfm import init_resnet20, resnet20_logits, resnet20_loss
+from repro.train import DecentralizedTrainer
+from repro.train.metrics import accuracy
+
+K = 8
+
+
+def run(kind, steps, **kw):
+    opt = make_optimizer(kind, K=K, eta=1e-3, weight_decay=1e-4,
+                         topology="ring", **kw)
+    trainer = DecentralizedTrainer(lambda p, b: resnet20_loss(p, b), opt)
+    params = init_resnet20(jax.random.PRNGKey(0), width=8)
+    state = trainer.init(params)
+
+    def it():
+        key = jax.random.PRNGKey(11)
+        t = 0
+        while True:
+            yield image_batch_stacked(jax.random.fold_in(key, t), K, 8)
+            t += 1
+
+    state, log = trainer.fit(state, it(), steps, log_every=steps)
+    avg = trainer.averaged_params(state)
+    test = image_batch_stacked(jax.random.PRNGKey(99), K, 32)
+    images = test["images"].reshape((-1,) + test["images"].shape[2:])
+    labels = test["label"].reshape(-1)
+    acc = accuracy(resnet20_logits(avg, images), labels)
+    return log.loss[-1], acc, log.comm_mb[-1]
+
+
+def main(steps: int = 60) -> None:
+    loss_v, acc_v, mb_v = run("d-adam", steps, period=1)
+    emit("vision/d-adam-vanilla_loss", 0.0, f"{loss_v:.4f}")
+    emit("vision/d-adam-vanilla_acc", 0.0, f"{acc_v:.3f}")
+    loss_p, acc_p, mb_p = run("d-adam", steps, period=8)
+    emit("vision/d-adam_p8_loss", 0.0, f"{loss_p:.4f}")
+    emit("vision/d-adam_p8_acc", 0.0, f"{acc_p:.3f}")
+    emit("vision/d-adam_p8_comm_reduction", 0.0,
+         f"{mb_v / max(mb_p, 1e-9):.1f}x")
+    loss_c, acc_c, mb_c = run("cd-adam", steps, period=8, gamma=0.4,
+                              compressor="sign")
+    emit("vision/cd-adam_p8_loss", 0.0, f"{loss_c:.4f}")
+    emit("vision/cd-adam_p8_acc", 0.0, f"{acc_c:.3f}")
+    emit("vision/cd-adam_p8_comm_reduction", 0.0,
+         f"{mb_v / max(mb_c, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

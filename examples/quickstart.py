@@ -1,0 +1,42 @@
+"""Quickstart: decentralized Adam (the paper's Alg. 1) in ~40 lines.
+
+Trains an 8-worker ring on a synthetic non-IID CTR task with DeepFM —
+the paper's own motivating application (sparse categorical features where
+adaptivity matters) — and prints loss / consensus / communication cost.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import make_optimizer
+from repro.data import ctr_batch_stacked, make_ctr_task
+from repro.models.deepfm import deepfm_loss, init_deepfm
+from repro.train import DecentralizedTrainer
+
+K = 8  # workers in a ring, as in the paper's experiments
+
+task = make_ctr_task(seed=0, n_fields=8, features_per_field=32)
+
+# D-Adam: adaptive learning rates per worker, gossip every p=4 steps
+opt = make_optimizer("d-adam", K=K, eta=1e-3, period=4, topology="ring")
+trainer = DecentralizedTrainer(lambda p, b: deepfm_loss(p, b), opt)
+
+params = init_deepfm(jax.random.PRNGKey(0), task.n_features, task.n_fields,
+                     hidden=(64, 64))
+state = trainer.init(params)
+
+
+def batches():
+    key = jax.random.PRNGKey(1)
+    t = 0
+    while True:  # each worker draws from its own skewed distribution
+        yield ctr_batch_stacked(task, jax.random.fold_in(key, t), K, 32)
+        t += 1
+
+
+state, log = trainer.fit(state, batches(), steps=100, log_every=20)
+for s, l, c, mb in zip(log.step, log.loss, log.consensus, log.comm_mb):
+    print(f"step {s:4d}  loss {l:.4f}  consensus {c:.2e}  comm {mb:.1f} MB")
+print("final averaged-model params ready:",
+      sum(x.size for x in jax.tree_util.tree_leaves(
+          trainer.averaged_params(state))), "weights")

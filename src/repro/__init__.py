@@ -1,0 +1,13 @@
+"""repro: Adaptive Serverless Learning (Gao & Huang, 2020) — D-Adam and
+CD-Adam as a production multi-pod JAX/TPU framework.
+
+Public entry points:
+    repro.core       — make_optimizer / topologies / compressors (the paper)
+    repro.models     — build_model over six architecture families
+    repro.train      — DecentralizedTrainer
+    repro.serve      — prefill/decode engine
+    repro.launch     — production meshes, dry-run, train/serve drivers
+    repro.kernels    — Pallas TPU kernels (+ interpret-mode CPU validation)
+    repro.analysis   — trip-count-aware HLO cost model + roofline
+"""
+__version__ = "1.0.0"

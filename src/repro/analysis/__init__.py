@@ -1,0 +1,5 @@
+from repro.analysis.hlo import collective_bytes, collective_counts
+from repro.analysis.roofline import Roofline, from_artifact, model_flops_for
+
+__all__ = ["collective_bytes", "collective_counts", "Roofline",
+           "from_artifact", "model_flops_for"]

@@ -1,0 +1,84 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    T_compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    T_memory     = HLO_bytes / (chips * HBM_BW)
+    T_collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+from the partitioned HLO text (repro.analysis.hlo). cost_analysis on the
+CPU backend reports *per-device* numbers for the partitioned module, so the
+per-chip terms divide by the per-device values directly; we normalize both
+conventions via the ``per_device`` flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float              # per-device HLO flops
+    hbm_bytes: float          # per-device bytes accessed
+    coll_bytes: float         # per-device collective operand bytes
+    model_flops: float        # 6 * N_active * tokens (whole step, global)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    coll_breakdown: Optional[Dict[str, int]] = None
+
+    def finalize(self) -> "Roofline":
+        self.t_compute = self.flops / PEAK_FLOPS
+        self.t_memory = self.hbm_bytes / HBM_BW
+        self.t_collective = self.coll_bytes / ICI_BW
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (global)."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap estimate: max of the three terms (s)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(bottleneck=self.bottleneck, usefulness=self.usefulness,
+                 step_time=self.step_time)
+        return d
+
+
+def from_artifact(art: Dict[str, Any]) -> Roofline:
+    """Build from a dryrun JSON artifact (see launch/dryrun.py)."""
+    r = Roofline(
+        arch=art["arch"], shape=art["shape"], mesh=art["mesh"],
+        chips=art["chips"],
+        flops=art["cost"].get("flops", 0.0),
+        hbm_bytes=art["cost"].get("bytes accessed", 0.0),
+        coll_bytes=art["collectives"]["total"],
+        model_flops=art.get("model_flops", 0.0),
+        coll_breakdown=art["collectives"],
+    )
+    return r.finalize()
+
+
+def model_flops_for(n_active_params: int, tokens: int, kind: str) -> float:
+    """6ND for a train step (fwd+bwd), 2ND for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens

@@ -1,0 +1,84 @@
+"""Checkpointing: dependency-free pytree save/restore with metadata.
+
+Format: one ``.npz`` holding flattened leaves keyed by their tree path +
+a JSON sidecar with the treedef / step / config hash. Atomic via
+write-to-temp + rename. Works for optimizer states (NamedTuples) too.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: PyTree, *, step: int = 0,
+         meta: Optional[Dict[str, Any]] = None) -> None:
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    arrays = {}
+    order = []
+    for i, (p, leaf) in enumerate(leaves):
+        key = f"{i:05d}|{_path_str(p)}"
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[key] = arr.view(np.uint16)
+            order.append((key, "bfloat16"))
+        else:
+            arrays[key] = arr
+            order.append((key, str(arr.dtype)))
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    side = {"step": step, "meta": meta or {}, "leaves": order}
+    with open(path + ".json", "w") as f:
+        json.dump(side, f)
+
+
+def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(path + ".json") as f:
+        side = json.load(f)
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(side["leaves"]) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(side['leaves'])} leaves, expected "
+            f"{len(leaves_like)}")
+    out = []
+    for (key, dtype_name), ref in zip(side["leaves"], leaves_like):
+        arr = data[key]
+        if dtype_name == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        out.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), side["step"]

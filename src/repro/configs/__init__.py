@@ -1,0 +1,54 @@
+"""Architecture config registry: ``get_arch(id)`` / ``get_reduced(id)``.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+module cites its source in the docstring and carries a ``reduced()``
+CPU-smoke variant (<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                ModelConfig, ParallelConfig)
+
+_MODULES: Dict[str, str] = {
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "yi-6b": "repro.configs.yi_6b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision",
+}
+
+# (arch, shape) combos that are skipped by design — see DESIGN.md §6.
+SKIPS = {
+    ("whisper-large-v3", "long_500k"):
+        "enc-dec decoder positionally capped; 524k-token decode is "
+        "architecturally meaningless and whisper has no sub-quadratic "
+        "decoder variant",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list_archs()}")
+    return importlib.import_module(_MODULES[arch_id]).FULL
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {list_archs()}")
+    return importlib.import_module(_MODULES[arch_id]).reduced()
+
+
+__all__ = ["ArchConfig", "ModelConfig", "ParallelConfig", "InputShape",
+           "INPUT_SHAPES", "SKIPS", "list_archs", "get_arch", "get_reduced"]

@@ -1,0 +1,99 @@
+"""Baselines the paper compares against (we implement every one).
+
+* D-Adam-vanilla — Alg. 1 with p = 1 (gossip every iteration), the paper's
+  primary comparison point. Constructed by config, no extra code path.
+* D-PSGD [15] — decentralized *SGD* with gossip averaging (the non-adaptive
+  predecessor): local step  x_{t+1/2} = x_t - eta * g_t, gossip identical.
+* C-Adam — centralized Adam (C-PSGD with adaptive server step): one global
+  parameter copy, gradients all-reduced every step. Equivalent to K = 1
+  Adam on the averaged gradient; used for quality parity checks and the
+  'global' worker mode of huge configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dadam
+from repro.core.dadam import DAdamConfig
+from repro.core.topology import Topology
+
+PyTree = Any
+
+
+# ------------------------------- D-PSGD ------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSGDConfig:
+    eta: float = 1e-2
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    period: int = 1
+    mixing: str = "roll"
+
+
+class DPSGDState(NamedTuple):
+    params: PyTree
+    velocity: PyTree
+    count: jax.Array
+
+
+def dpsgd_init(params_stacked: PyTree, cfg: DPSGDConfig) -> DPSGDState:
+    return DPSGDState(
+        params_stacked,
+        jax.tree_util.tree_map(jnp.zeros_like, params_stacked),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def dpsgd_step(state: DPSGDState, grads: PyTree, topo: Topology,
+               cfg: DPSGDConfig) -> DPSGDState:
+    count = state.count + 1
+
+    def upd(x, v, g):
+        g = g.astype(x.dtype)
+        if cfg.weight_decay:
+            g = g + cfg.weight_decay * x
+        v_new = cfg.momentum * v + g
+        return x - cfg.eta * v_new, v_new
+
+    out = jax.tree_util.tree_map(upd, state.params, state.velocity, grads)
+    half = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    vel = jax.tree_util.tree_map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+
+    d_cfg = DAdamConfig(mixing=cfg.mixing, period=cfg.period)
+    if cfg.period == 1:
+        return DPSGDState(dadam.gossip_stacked(half, topo, d_cfg), vel, count)
+    new_params = jax.lax.cond(
+        (count % cfg.period) == 0,
+        lambda x: dadam.gossip_stacked(x, topo, d_cfg),
+        lambda x: x,
+        half,
+    )
+    return DPSGDState(new_params, vel, count)
+
+
+# ------------------------------- C-Adam ------------------------------------
+
+
+class CAdamState(NamedTuple):
+    params: PyTree            # single copy (no worker dim)
+    moments: dadam.AdamMoments
+
+
+def cadam_init(params: PyTree, cfg: DAdamConfig) -> CAdamState:
+    return CAdamState(params, dadam.init_moments(params, cfg))
+
+
+def cadam_step(state: CAdamState, mean_grads: PyTree,
+               cfg: DAdamConfig) -> CAdamState:
+    """Centralized Adam on the all-reduced mean gradient."""
+    new_params, mom = dadam.local_update(
+        state.params, mean_grads, state.moments, cfg)
+    return CAdamState(new_params, mom)

@@ -1,0 +1,226 @@
+"""CD-Adam (Algorithm 2): D-Adam with compressed gossip + error feedback.
+
+At a communication round (mod(t+1, p) == 0), worker k:
+
+    x_{t+1}   = x_{t+1/2} + gamma * sum_j w_kj (xhat_j - xhat_k)     (local)
+    q_k       = Q(x_{t+1} - xhat_k)                                  (compress)
+    send q_k to neighbors / receive q_j                              (wire)
+    xhat_j   += q_j   for j in N_k ∪ {k}                             (update)
+
+Every worker stores xhat copies of itself and each neighbor (CHOCO-style
+state), so the mixing step needs *no* communication; only the compressed
+residual q travels. In the stacked-K runtime the neighbor exchange of the
+*encoded* payload (int8 sign bits / top-k pairs) is a ``jnp.roll`` over the
+sharded worker dim — i.e. the lowered collective-permute genuinely carries
+the compressed byte count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dadam
+from repro.core.compression import Compressor
+from repro.core.dadam import AdamMoments, DAdamConfig, init_moments, local_update
+from repro.core.topology import Topology
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CDAdamConfig(DAdamConfig):
+    gamma: float = 0.4  # paper's consensus step size
+
+    def validate(self) -> None:  # type: ignore[override]
+        super().validate()
+        if not 0 < self.gamma <= 1:
+            raise ValueError("gamma must be in (0, 1]")
+
+
+class CDAdamState(NamedTuple):
+    params: PyTree                 # x,     stacked (K, ...)
+    moments: AdamMoments
+    hat_self: PyTree               # xhat^{(k)},         stacked (K, ...)
+    hat_nbrs: Tuple[PyTree, ...]   # xhat^{((k+s)%K)} per topology offset s
+
+
+# --------------------- stacked encode/decode helpers -----------------------
+
+
+def _encode_stacked(comp: Compressor, tree: PyTree) -> PyTree:
+    """vmap Q.encode over the leading worker dim of every leaf (per-worker
+    scales!), producing payload leaves that keep the leading K dim.
+
+    Leaves are NOT flattened: elementwise payloads (sign bits, quantized
+    levels) keep the leaf's full shape so the tensor-parallel 'model'
+    sharding of the parameter survives onto the payload — flattening would
+    force each device to hold and ppermute the whole worker's payload
+    (measured 16x wire inflation; EXPERIMENTS.md §Perf iteration 4)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.vmap(comp.encode)(x), tree
+    )
+
+
+def _decode_stacked(comp: Compressor, payload: PyTree, like: PyTree) -> PyTree:
+    def dec(p, x):
+        return jax.vmap(lambda q: comp.decode(q, x.shape[1:], x.dtype))(p)
+
+    return jax.tree_util.tree_map(
+        dec, payload, like,
+        is_leaf=lambda t: isinstance(t, dict) and ("bits" in t or "values" in t
+                                                   or "q" in t),
+    )
+
+
+def _roll_payload(payload: PyTree, shift: int) -> PyTree:
+    """Shift the per-worker payload along the worker dim: worker k receives
+    worker (k + s) % K's message. Scalars-per-worker roll too (axis 0)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.roll(a, shift, axis=0) if a.ndim >= 1 else a, payload
+    )
+
+
+# ------------------------------- algorithm ---------------------------------
+
+
+def init(params_stacked: PyTree, cfg: CDAdamConfig,
+         topo: Topology) -> CDAdamState:
+    cfg.validate()
+    if not topo.offsets and topo.K > 1:
+        raise ValueError("CD-Adam runtime requires a shift-invariant topology")
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+    # xhat_0 = 0 (CHOCO convention); neighbor copies likewise.
+    hat_nbrs = tuple(jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
+                     for _ in topo.offsets)
+    return CDAdamState(params_stacked, init_moments(params_stacked, cfg),
+                       zeros, hat_nbrs)
+
+
+def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
+                comp: Compressor) -> CDAdamState:
+    """Lines 8-11 of Alg. 2 on the half-step parameters."""
+    x_half, mom, hat_self, hat_nbrs = state_half
+
+    # (8) local mixing using stored neighbor copies — no communication.
+    def mixed(xh, hs, *hns):
+        acc = jnp.zeros_like(hs, dtype=jnp.float32)
+        for w, hn in zip(topo.offset_weights, hns):
+            acc = acc + w * (hn.astype(jnp.float32) - hs.astype(jnp.float32))
+        return (xh.astype(jnp.float32) + cfg.gamma * acc).astype(xh.dtype)
+
+    x_new = jax.tree_util.tree_map(mixed, x_half, hat_self, *hat_nbrs)
+
+    # (9) compress the residual against our own xhat.
+    resid = jax.tree_util.tree_map(lambda a, b: a - b, x_new, hat_self)
+    q_enc = _encode_stacked(comp, resid)
+    q_dec = _decode_stacked(comp, q_enc, resid)
+
+    # (11a) update own copy: xhat_k += q_k
+    new_hat_self = jax.tree_util.tree_map(
+        lambda h, q: h + q.astype(h.dtype), hat_self, q_dec)
+
+    # (10)+(11b) neighbors: worker k needs q_{(k+s)%K}; the *encoded* payload
+    # travels (roll over the sharded worker dim => compressed-size
+    # collective-permute), then is decoded locally.
+    new_hat_nbrs = []
+    for s, hn in zip(topo.offsets, hat_nbrs):
+        recv_enc = _roll_payload(q_enc, -s)
+        recv = _decode_stacked(comp, recv_enc, resid)
+        new_hat_nbrs.append(jax.tree_util.tree_map(
+            lambda h, q: h + q.astype(h.dtype), hn, recv))
+
+    return CDAdamState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))
+
+
+def step(state: CDAdamState, grads: PyTree, topo: Topology,
+         cfg: CDAdamConfig, comp: Compressor) -> CDAdamState:
+    """One iteration of Alg. 2 (stacked mode)."""
+    half, mom = local_update(state.params, grads, state.moments, cfg)
+    half_state = CDAdamState(half, mom, state.hat_self, state.hat_nbrs)
+    if topo.K == 1:
+        return half_state
+    if cfg.period == 1:
+        return _comm_round(half_state, topo, cfg, comp)
+    do_comm = (mom.count % cfg.period) == 0
+    return jax.lax.cond(
+        do_comm,
+        lambda s: _comm_round(s, topo, cfg, comp),
+        lambda s: s,
+        half_state,
+    )
+
+
+def round_step(state: CDAdamState,
+               grad_fn: Callable[[PyTree, Any], PyTree],
+               batches: Any, topo: Topology, cfg: CDAdamConfig,
+               comp: Compressor) -> CDAdamState:
+    """One communication round: p local Adam steps + one compressed gossip."""
+
+    def body(carry: CDAdamState, batch):
+        grads = grad_fn(carry.params, batch)
+        half, mom = local_update(carry.params, grads, carry.moments, cfg)
+        return CDAdamState(half, mom, carry.hat_self, carry.hat_nbrs), ()
+
+    inner, _ = jax.lax.scan(body, state, batches)
+    if topo.K == 1:
+        return inner
+    return _comm_round(inner, topo, cfg, comp)
+
+
+# ----------------------------- axis variant --------------------------------
+
+
+class CDAdamAxisState(NamedTuple):
+    params: PyTree
+    moments: AdamMoments
+    hat_self: PyTree
+    hat_nbrs: Tuple[PyTree, ...]
+
+
+def comm_round_axis(state_half: CDAdamAxisState, topo: Topology,
+                    cfg: CDAdamConfig, comp: Compressor,
+                    axis_name: str) -> CDAdamAxisState:
+    """Alg. 2 communication step inside ``shard_map`` over ``axis_name``.
+
+    Parameters here are the *local shard* of one worker (= one pod); the
+    encoded q payload is ppermuted to graph neighbors so the inter-pod link
+    carries only compressed bytes.
+    """
+    x_half, mom, hat_self, hat_nbrs = state_half
+    K = topo.K
+
+    def mixed(xh, hs, *hns):
+        acc = jnp.zeros_like(hs, dtype=jnp.float32)
+        for w, hn in zip(topo.offset_weights, hns):
+            acc = acc + w * (hn.astype(jnp.float32) - hs.astype(jnp.float32))
+        return (xh.astype(jnp.float32) + cfg.gamma * acc).astype(xh.dtype)
+
+    x_new = jax.tree_util.tree_map(mixed, x_half, hat_self, *hat_nbrs)
+    resid = jax.tree_util.tree_map(lambda a, b: a - b, x_new, hat_self)
+    q_enc = jax.tree_util.tree_map(
+        lambda x: comp.encode(x.reshape(-1)), resid)
+
+    def dec(payload, like):
+        return jax.tree_util.tree_map(
+            lambda p, x: comp.decode(p, (x.size,), x.dtype).reshape(x.shape),
+            payload, like,
+            is_leaf=lambda t: isinstance(t, dict)
+            and ("bits" in t or "values" in t or "q" in t),
+        )
+
+    new_hat_self = jax.tree_util.tree_map(
+        lambda h, q: h + q.astype(h.dtype), hat_self, dec(q_enc, resid))
+
+    new_hat_nbrs = []
+    for s, hn in zip(topo.offsets, hat_nbrs):
+        perm = [((k + s) % K, k) for k in range(K)]
+        recv_enc = jax.tree_util.tree_map(
+            lambda a: jax.lax.ppermute(a, axis_name, perm), q_enc)
+        recv = dec(recv_enc, resid)
+        new_hat_nbrs.append(jax.tree_util.tree_map(
+            lambda h, q: h + q.astype(h.dtype), hn, recv))
+
+    return CDAdamAxisState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))

@@ -1,0 +1,182 @@
+"""Gossip topologies: doubly-stochastic mixing matrices W (Definition 1).
+
+The paper requires W symmetric, doubly stochastic, with spectral gap
+rho = 1 - |lambda_2| in (0, 1].  The experiments use a ring of 8 workers.
+
+We provide the standard zoo (ring, torus, hypercube, exponential,
+fully-connected) plus helpers for neighbor lists so the distributed
+runtime can lower gossip as sparse ``ppermute`` exchanges instead of a
+dense mixing matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A gossip graph over K workers.
+
+    Attributes:
+      name: human-readable id.
+      weights: (K, K) symmetric doubly-stochastic mixing matrix.
+      neighbors: for each worker, the list of (neighbor_rank, weight) pairs
+        with neighbor != self. Self weight is ``self_weights[k]``.
+      offsets: ring-style permutation offsets covering all edges, i.e. a set
+        of integers s such that every (k, (k+s) % K) is an edge with a
+        *uniform* weight. Only populated for shift-invariant graphs (ring,
+        exponential, fully-connected); used to lower gossip as ppermutes.
+    """
+
+    name: str
+    weights: np.ndarray
+    offsets: Tuple[int, ...]
+    offset_weights: Tuple[float, ...]
+    self_weight: float
+
+    @property
+    def K(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def spectral_gap(self) -> float:
+        return spectral_gap(self.weights)
+
+    def neighbors_of(self, k: int) -> List[Tuple[int, float]]:
+        row = self.weights[k]
+        return [(j, float(row[j])) for j in np.nonzero(row)[0] if j != k]
+
+
+def _check_doubly_stochastic(W: np.ndarray, atol: float = 1e-8) -> None:
+    K = W.shape[0]
+    assert W.shape == (K, K)
+    if not np.allclose(W, W.T, atol=atol):
+        raise ValueError("W must be symmetric")
+    if not np.allclose(W.sum(axis=0), 1.0, atol=atol):
+        raise ValueError("W columns must sum to 1")
+    if not np.allclose(W.sum(axis=1), 1.0, atol=atol):
+        raise ValueError("W rows must sum to 1")
+    if np.any(W < -atol):
+        raise ValueError("W must be non-negative")
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    """rho = 1 - |lambda_2| (Definition 1)."""
+    eig = np.linalg.eigvalsh(W)
+    eig = np.sort(np.abs(eig))[::-1]
+    if not np.isclose(eig[0], 1.0, atol=1e-6):
+        raise ValueError(f"largest |eigenvalue| must be 1, got {eig[0]}")
+    if len(eig) == 1:
+        return 1.0
+    return float(1.0 - eig[1])
+
+
+def ring(K: int, self_weight: float | None = None) -> Topology:
+    """Ring topology (the paper's experimental setup).
+
+    Each worker mixes with its left and right neighbor. Default weights are
+    the canonical 1/3-1/3-1/3 (for K >= 3).
+    """
+    if K <= 0:
+        raise ValueError("K must be positive")
+    if K == 1:
+        return Topology("ring", np.ones((1, 1)), (), (), 1.0)
+    if K == 2:
+        W = np.array([[0.5, 0.5], [0.5, 0.5]])
+        return Topology("ring", W, (1,), (0.5,), 0.5)
+    sw = 1.0 / 3.0 if self_weight is None else self_weight
+    nw = (1.0 - sw) / 2.0
+    W = np.zeros((K, K))
+    for k in range(K):
+        W[k, k] = sw
+        W[k, (k + 1) % K] = nw
+        W[k, (k - 1) % K] = nw
+    _check_doubly_stochastic(W)
+    return Topology("ring", W, (1, K - 1), (nw, nw), sw)
+
+
+def fully_connected(K: int) -> Topology:
+    """W = (1/K) 11^T — gossip == exact averaging (rho = 1)."""
+    W = np.full((K, K), 1.0 / K)
+    offsets = tuple(range(1, K))
+    return Topology(
+        "fully_connected", W, offsets, tuple([1.0 / K] * (K - 1)), 1.0 / K
+    )
+
+
+def exponential(K: int) -> Topology:
+    """One-peer-per-power-of-two exponential graph (static union version).
+
+    Worker k is connected to k +/- 2^i for all 2^i < K. Well-conditioned
+    (rho ~ O(1/log K)) while keeping degree log K.
+    """
+    if K == 1:
+        return Topology("exponential", np.ones((1, 1)), (), (), 1.0)
+    hops = []
+    i = 1
+    while i < K:
+        hops.append(i)
+        i *= 2
+    # union of +/- hops; uniform weights over self + distinct neighbors
+    offs = sorted({h % K for h in hops} | {(-h) % K for h in hops} - {0})
+    deg = len(offs)
+    w = 1.0 / (deg + 1)
+    W = np.zeros((K, K))
+    for k in range(K):
+        W[k, k] = w
+        for s in offs:
+            W[k, (k + s) % K] += w
+    _check_doubly_stochastic(W)
+    return Topology("exponential", W, tuple(offs), tuple([w] * deg), w)
+
+
+def torus(rows: int, cols: int) -> Topology:
+    """2-D torus: 4 neighbors each, weight 1/5."""
+    K = rows * cols
+    W = np.zeros((K, K))
+    w = 1.0 / 5.0
+
+    def rank(r: int, c: int) -> int:
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            k = rank(r, c)
+            W[k, k] = w
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                W[k, rank(r + dr, c + dc)] += w
+    _check_doubly_stochastic(W)
+    # torus over a flattened axis is shift-invariant with offsets
+    # {+-1 (mod cols wrap folded in), +-cols}; exact only when rows>2, cols>2
+    offs: Tuple[int, ...] = ()
+    offw: Tuple[float, ...] = ()
+    if rows > 2 and cols > 2:
+        offs = (1, K - 1, cols, K - cols)
+        offw = (w, w, w, w)
+    return Topology("torus", W, offs, offw, w)
+
+
+_REGISTRY = {
+    "ring": ring,
+    "fully_connected": fully_connected,
+    "exponential": exponential,
+}
+
+
+def make_topology(name: str, K: int, **kw) -> Topology:
+    if name == "torus":
+        r = int(np.sqrt(K))
+        while K % r:
+            r -= 1
+        return torus(r, K // r)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](K, **kw)
+
+
+def effective_rho(topo: Topology) -> float:
+    """Convenience used by convergence-bound reporting (Theorem 1)."""
+    return topo.spectral_gap

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  fused_adam      — the paper's per-worker adaptive update, one VMEM pass
+  sign_compress   — CD-Adam's error-feedback compression + int8 payload
+  flash_attention — prefill/train attention (VMEM-resident online softmax)
+  rwkv_scan       — RWKV6 WKV recurrence (state resident in VMEM)
+
+ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the pure
+jnp oracles the tests pin each kernel against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,84 @@
+"""Fused D-Adam local update as a Pallas TPU kernel.
+
+The paper's local step (Alg. 1 lines 4-6) touches the full parameter vector
+every iteration: read p, g, m, v; write p, m, v. Unfused XLA emits separate
+m-update / v-update / rsqrt / axpy passes (~11 HBM round-trips); this
+kernel performs the whole update in ONE pass over (8k, 128)-aligned VMEM
+tiles — 4 reads + 3 writes, the memory-bound optimum.
+
+Grid: 1-D over row-blocks of the (rows, 128) reshaped parameter; block
+shape (BLOCK_ROWS, 128) in VMEM. Hyperparameters are compile-time constants
+(closure), matching how the optimizer jits one step per config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256  # (256, 128) f32 tile = 128 KiB/operand; 7 operands < 1 MiB
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *,
+                 eta: float, beta1: float, beta2: float, tau: float,
+                 weight_decay: float):
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...]
+    if weight_decay:
+        g = g + weight_decay * p.astype(jnp.float32)
+    m = beta1 * m_ref[...].astype(jnp.float32) + (1.0 - beta1) * g
+    v = beta2 * v_ref[...].astype(jnp.float32) + (1.0 - beta2) * g * g
+    step = eta * m * jax.lax.rsqrt(v + 1e-30) \
+        if tau == 0.0 else eta * m / (jnp.sqrt(v) + tau)
+    po_ref[...] = (p.astype(jnp.float32) - step).astype(po_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+    vo_ref[...] = v.astype(vo_ref.dtype)
+
+
+def fused_adam(p: jax.Array, g: jax.Array, m: jax.Array, v: jax.Array, *,
+               eta: float, beta1: float = 0.9, beta2: float = 0.999,
+               tau: float = 1e-6, weight_decay: float = 0.0,
+               block_rows: int = BLOCK_ROWS, interpret: bool = False
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Apply the fused update to a flat (or any-shape) tensor."""
+    shape, dtype = p.shape, p.dtype
+    n = p.size
+    # pad to a whole number of (block_rows, LANE) tiles
+    per_block = block_rows * LANE
+    n_pad = (-n) % per_block
+    def prep(x):
+        flat = x.reshape(-1)
+        if n_pad:
+            flat = jnp.pad(flat, (0, n_pad))
+        return flat.reshape(-1, LANE)
+    pp, gg, mm, vv = prep(p), prep(g), prep(m), prep(v)
+    rows = pp.shape[0]
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    kernel = functools.partial(_adam_kernel, eta=eta, beta1=beta1,
+                               beta2=beta2, tau=tau,
+                               weight_decay=weight_decay)
+    po, mo, vo = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct(pp.shape, dtype),
+            jax.ShapeDtypeStruct(mm.shape, m.dtype),
+            jax.ShapeDtypeStruct(vv.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(pp, gg, mm, vv)
+
+    def unprep(x, like):
+        flat = x.reshape(-1)
+        if n_pad:
+            flat = flat[:n]
+        return flat.reshape(like.shape)
+
+    return unprep(po, p), unprep(mo, m), unprep(vo, v)

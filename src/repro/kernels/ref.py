@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are intentionally the simplest correct implementations — the kernel
+sweeps in tests/test_kernels.py assert each Pallas kernel (interpret mode on
+CPU) matches these across shapes and dtypes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_adam_ref(p, g, m, v, *, eta: float, beta1: float, beta2: float,
+                   tau: float, weight_decay: float = 0.0
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The paper's Alg. 1 lines 4-6 (no bias correction)."""
+    g = g.astype(m.dtype)
+    if weight_decay:
+        g = g + weight_decay * p.astype(m.dtype)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    p_new = p - (eta * m_new / (jnp.sqrt(v_new) + tau)).astype(p.dtype)
+    return p_new, m_new, v_new
+
+
+def sign_compress_ref(x, hat, *, gamma_scale: float = 1.0
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """CHOCO error-feedback sign compression:
+        delta = x - hat
+        scale = mean(|delta|)
+        q     = int8 sign(delta)
+        hat'  = hat + scale * q
+    Returns (q int8, scale f32 scalar, hat')."""
+    delta = (x - hat).astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(delta)) * gamma_scale
+    q = jnp.sign(delta).astype(jnp.int8)
+    hat_new = (hat.astype(jnp.float32)
+               + scale * q.astype(jnp.float32)).astype(hat.dtype)
+    return q, scale, hat_new
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """Naive attention with GQA. q (B,S,Hq,D), k/v (B,T,Hk,D) ->
+    (B,S,Hq,D), f32 accumulation."""
+    B, S, Hq, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, S, Hk, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if window and window > 0:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def rwkv_scan_ref(r, k, v, w, u, state) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 WKV recurrence. r,k,v,w: (B,S,H,D); u: (H,D);
+    state: (B,H,D,D) [key x value]. Returns (y (B,S,H,D) f32, state')."""
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), inputs)
+    return jnp.moveaxis(ys, 0, 1), state

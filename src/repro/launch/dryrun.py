@@ -1,0 +1,364 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax-importing module —
+# jax locks the device count at first init. Do not reorder.
+
+import argparse
+import contextlib
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze, collective_bytes, collective_counts
+from repro.analysis.roofline import from_artifact, model_flops_for
+from repro.configs import (INPUT_SHAPES, SKIPS, get_arch, list_archs)
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import make_optimizer
+from repro.launch.mesh import make_production_mesh, n_chips
+from repro.launch.shardings import (ShardingPlan, cache_shardings, make_plan,
+                                    serve_batch_pspec, train_batch_pspec,
+                                    tree_shardings)
+from repro.models import build_model
+from repro.serve.engine import cache_spec, effective_config, kv_cache_len
+
+PyTree = Any
+
+
+# ------------------------------ input specs ----------------------------------
+
+
+def train_batch_sds(arch: ArchConfig, shape: InputShape, K: int,
+                    p: int) -> PyTree:
+    """ShapeDtypeStruct stand-ins for one communication round of batches:
+    every leaf is (p, K, per_worker, ...)."""
+    cfg = arch.model
+    b = shape.global_batch // K
+    assert b * K == shape.global_batch, (
+        f"global_batch {shape.global_batch} not divisible by K={K}")
+    S = shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct((p, K, b, s), jnp.int32)
+    if cfg.family == "vlm":
+        s_txt = S - cfg.n_patches
+        return {"tokens": tok(s_txt + 1),
+                "patches": jax.ShapeDtypeStruct(
+                    (p, K, b, cfg.n_patches, 1024), jnp.bfloat16)}
+    if cfg.family == "audio":
+        return {"tokens": tok(S + 1),
+                "audio_embeds": jax.ShapeDtypeStruct(
+                    (p, K, b, cfg.n_audio_ctx, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": tok(S + 1)}
+
+
+def serve_batch_sds(arch: ArchConfig, shape: InputShape) -> PyTree:
+    cfg = arch.model
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        return {"tokens": jax.ShapeDtypeStruct((B, S - cfg.n_patches),
+                                               jnp.int32),
+                "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, 1024),
+                                                jnp.bfloat16)}
+    if cfg.family == "audio":
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "audio_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.n_audio_ctx, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def input_specs(arch: ArchConfig, shape_name: str, *, K: int = 1,
+                p: int = 1) -> PyTree:
+    """Public helper (brief step 2): ShapeDtypeStruct stand-ins for every
+    model input of the given input shape."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_sds(arch, shape, K, p)
+    if shape.kind == "prefill":
+        return serve_batch_sds(arch, shape)
+    cfg = effective_config(arch.model, shape)
+    B = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": cache_spec(cfg, B, shape.seq_len),
+    }
+
+
+# ------------------------------ step builders --------------------------------
+
+
+def build_train(arch: ArchConfig, plan: ShardingPlan, shape: InputShape,
+                optimizer: Optional[str] = None,
+                mixing: Optional[str] = None,
+                microbatch: Optional[int] = None):
+    cfg = arch.model
+    par = arch.parallel
+    api = build_model(cfg)
+    K = max(plan.K, 1)
+    opt = make_optimizer(
+        optimizer or par.optimizer, K=K, topology=par.topology,
+        period=par.period, eta=par.eta, tau=par.tau, gamma=par.gamma,
+        compressor=par.compressor, mixing=mixing or par.mixing,
+        moment_dtype=par.moment_dtype, weight_decay=par.weight_decay)
+
+    def init_all():
+        params = api.init(jax.random.PRNGKey(0))
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (K,) + x.shape), params)
+        return opt.init(stacked)
+
+    state_sds = jax.eval_shape(init_all)
+    state_sh = tree_shardings(plan, state_sds, stacked=True)
+    batch_sds = train_batch_sds(arch, shape, K, par.period)
+    batch_sh = jax.tree_util.tree_map(
+        lambda l: jax.sharding.NamedSharding(
+            plan.mesh, train_batch_pspec(plan, l.shape)), batch_sds)
+
+    remat = par.remat
+
+    def loss(params, batch):
+        return api.loss(params, batch, remat=remat)
+
+    # spmd_axis_name lets with_sharding_constraint inside the per-worker
+    # loss lift across the vmapped worker dim (activation sharding hints).
+    wa = plan.worker_axes if plan.K > 1 else ()
+    spmd = (tuple(wa) if len(wa) > 1 else wa[0]) if wa else None
+    from repro.train.grad import make_worker_grad
+    worker_grad = make_worker_grad(loss, microbatch or par.microbatch)
+
+    if spmd is not None:
+        vgrad = jax.vmap(worker_grad, spmd_axis_name=spmd)
+    else:
+        vgrad = jax.vmap(worker_grad)
+
+    def grad_fn(params_stacked, batch):
+        return vgrad(params_stacked, batch)
+
+    def train_round(state, batches):
+        return opt.round(state, grad_fn, batches)
+
+    return train_round, (state_sds, batch_sds), (state_sh, batch_sh), state_sh
+
+
+def build_prefill(arch: ArchConfig, plan: ShardingPlan, shape: InputShape):
+    cfg = effective_config(arch.model, shape)
+    api = build_model(cfg)
+    cache_len = kv_cache_len(cfg, shape.seq_len)
+
+    def init_params():
+        return api.init(jax.random.PRNGKey(0))
+
+    params_sds = jax.eval_shape(init_params)
+    params_sh = tree_shardings(plan, params_sds, stacked=False, serve=True)
+    batch_sds = serve_batch_sds(arch, shape)
+    batch_sh = jax.tree_util.tree_map(
+        lambda l: jax.sharding.NamedSharding(
+            plan.mesh, serve_batch_pspec(plan, l.shape)), batch_sds)
+
+    def prefill_fn(params, batch):
+        return api.prefill(params, batch, cache_len=cache_len)
+
+    # output shardings: logits + cache
+    out_sds = jax.eval_shape(prefill_fn, params_sds, batch_sds)
+    logits_sh = jax.tree_util.tree_map(
+        lambda l: jax.sharding.NamedSharding(
+            plan.mesh, serve_batch_pspec(plan, l.shape)), out_sds[0])
+    cache_sh = cache_shardings(plan, out_sds[1])
+    return (prefill_fn, (params_sds, batch_sds), (params_sh, batch_sh),
+            (logits_sh, cache_sh))
+
+
+def build_decode(arch: ArchConfig, plan: ShardingPlan, shape: InputShape):
+    cfg = effective_config(arch.model, shape)
+    api = build_model(cfg)
+    B = shape.global_batch
+
+    def init_params():
+        return api.init(jax.random.PRNGKey(0))
+
+    params_sds = jax.eval_shape(init_params)
+    params_sh = tree_shardings(plan, params_sds, stacked=False, serve=True)
+    cache_sds = cache_spec(cfg, B, shape.seq_len)
+    cache_sh = cache_shardings(plan, cache_sds)
+    token_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    token_sh = jax.sharding.NamedSharding(
+        plan.mesh, serve_batch_pspec(plan, token_sds.shape))
+
+    def serve_step(params, cache, token):
+        return api.decode_step(params, cache, token)
+
+    out_sds = jax.eval_shape(serve_step, params_sds, cache_sds, token_sds)
+    logits_sh = jax.sharding.NamedSharding(
+        plan.mesh, serve_batch_pspec(plan, out_sds[0].shape))
+    out_cache_sh = cache_shardings(plan, out_sds[1])
+    return (serve_step, (params_sds, cache_sds, token_sds),
+            (params_sh, cache_sh, token_sh), (logits_sh, out_cache_sh))
+
+
+# --------------------------------- driver ------------------------------------
+
+
+def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               optimizer: Optional[str] = None, mixing: Optional[str] = None,
+               mode: Optional[str] = None, period: Optional[int] = None,
+               remat: Optional[str] = None, microbatch: Optional[int] = None,
+               out_dir: str = "artifacts/dryrun",
+               tag: str = "", verbose: bool = True) -> Dict[str, Any]:
+    if (arch_id, shape_name) in SKIPS:
+        return {"arch": arch_id, "shape": shape_name, "skipped": True,
+                "reason": SKIPS[(arch_id, shape_name)]}
+    t0 = time.time()
+    arch = get_arch(arch_id)
+    if period is not None or remat is not None:
+        par = arch.parallel
+        if period is not None:
+            par = dataclasses.replace(par, period=period)
+        if remat is not None:
+            par = dataclasses.replace(par, remat=remat)
+        arch = dataclasses.replace(arch, parallel=par)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(arch, mesh, multi_pod=multi_pod, mode=mode)
+
+    if shape.kind == "train":
+        fn, sds, in_sh, out_sh = build_train(arch, plan, shape,
+                                             optimizer=optimizer,
+                                             mixing=mixing,
+                                             microbatch=microbatch)
+    elif shape.kind == "prefill":
+        fn, sds, in_sh, out_sh = build_prefill(arch, plan, shape)
+    else:
+        fn, sds, in_sh, out_sh = build_decode(arch, plan, shape)
+
+    from repro.models import attention as _attn
+    act_ctx = (_attn.activation_sharding(mesh, plan.serve_batch_axes)
+               if shape.kind != "train"
+               else _attn.activation_sharding(mesh, ()))
+    with mesh, act_ctx:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost_raw = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    hc = analyze(hlo)
+    coll = hc.as_dict()
+    counts = {k: int(v) for k, v in hc.coll_counts.items()}
+
+    cfg = arch.model
+    if shape.kind == "train":
+        tokens = arch.parallel.period * shape.global_batch * shape.seq_len
+        mflops = model_flops_for(cfg.active_param_count(), tokens, "train")
+    elif shape.kind == "prefill":
+        mflops = model_flops_for(cfg.active_param_count(),
+                                 shape.global_batch * shape.seq_len, "serve")
+    else:
+        mflops = model_flops_for(cfg.active_param_count(),
+                                 shape.global_batch, "serve")
+
+    def _mem_attr(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    art = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips(mesh),
+        "mode": plan.mode, "K": plan.K,
+        "optimizer": optimizer or arch.parallel.optimizer,
+        "mixing": mixing or arch.parallel.mixing,
+        "period": arch.parallel.period,
+        "remat": arch.parallel.remat,
+        # trip-count-aware analyzer values (see repro.analysis.hlo);
+        # cost_raw keeps XLA's cost_analysis (undercounts while bodies).
+        "cost": {"flops": float(hc.flops), "bytes accessed": float(hc.bytes),
+                 "unknown_trip_counts": hc.unknown_trip_counts},
+        "cost_raw": {k: float(v) for k, v in cost_raw.items()
+                     if isinstance(v, (int, float))
+                     and k in ("flops", "bytes accessed",
+                               "bytes accessed output", "utilization")},
+        "collectives": coll,
+        "collective_counts": counts,
+        "memory": {
+            "argument_bytes": _mem_attr("argument_size_in_bytes"),
+            "output_bytes": _mem_attr("output_size_in_bytes"),
+            "temp_bytes": _mem_attr("temp_size_in_bytes"),
+            "generated_code_bytes": _mem_attr(
+                "generated_code_size_in_bytes"),
+        },
+        "model_flops": mflops,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "tag": tag,
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = (f"{arch_id.replace('.', '_')}_{shape_name}_"
+                 f"{art['mesh'].replace('x', '')}{suffix}.json")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(art, f, indent=1)
+    if verbose:
+        r = from_artifact(art)
+        print(f"[dryrun] {arch_id} x {shape_name} ({art['mesh']}, "
+              f"mode={plan.mode}, K={plan.K}) OK  "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s  "
+              f"Tc={r.t_compute:.2e} Tm={r.t_memory:.2e} "
+              f"Tcoll={r.t_collective:.2e} bound={r.bottleneck} "
+              f"useful={r.usefulness:.2f}")
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) combos")
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--mixing", default=None, choices=[None, "roll", "dense"])
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "stacked", "pods", "global"])
+    ap.add_argument("--period", type=int, default=None)
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "dots", "full"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                try:
+                    dryrun_one(a, s, multi_pod=mp, optimizer=args.optimizer,
+                               mixing=args.mixing, mode=args.mode,
+                               period=args.period, remat=args.remat,
+                               microbatch=args.microbatch,
+                               out_dir=args.out, tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — report-all driver
+                    failures.append((a, s, mp, repr(e)))
+                    print(f"[dryrun] {a} x {s} multi_pod={mp} FAILED: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all combinations lowered + compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes (functions — importing this module never touches jax
+device state; jax.make_mesh is only called when the launcher asks).
+
+single-pod: (16, 16)    -> ('data', 'model')      256 chips
+multi-pod : (2, 16, 16) -> ('pod', 'data', 'model') 512 chips
+
+Hardware model (TPU v5e-like, used by the roofline):
+  197 TFLOP/s bf16 / chip, 819 GB/s HBM / chip, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,306 @@
+"""Sharding plans: map (arch, worker mode, mesh) to PartitionSpecs.
+
+Worker-mapping modes (DESIGN.md §3) share ONE runtime representation —
+stacked parameters with a leading worker dim K — they differ only in which
+mesh axes carry the worker dim and which carry the inner (tensor/FSDP)
+sharding:
+
+  mode      worker dim axes          inner param axis groups
+  stacked   ('data',) | ('pod','data')   [('model',)]
+  pods      () | ('pod',)                [('data',), ('model',)]   (FSDP in-pod)
+  global    ()                           [('pod','data'), ('model',)] (full FSDP)
+
+Inner dims are assigned greedily: largest axis group gets the largest
+still-unassigned dim divisible by its size (megatron column/row sharding
+falls out of this for the standard matrices). Per-layer stacks
+('layers'/'enc_layers'/'dec_layers' in the path) keep their layer dim
+unsharded so lax.scan stays local.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+PyTree = Any
+
+_LAYER_STACK_KEYS = ("layers", "enc_layers", "dec_layers")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    mode: str                 # stacked | pods | global
+    multi_pod: bool
+    worker_axes: Tuple[str, ...]
+    inner_groups: Tuple[Tuple[str, ...], ...]
+    batch_axes: Tuple[str, ...]       # sharding of the per-worker batch dim
+    serve_groups: Tuple[Tuple[str, ...], ...]
+    serve_batch_axes: Tuple[str, ...]
+    model_cfg: Any = None             # head-aware sharding rules (see below)
+
+    @property
+    def K(self) -> int:
+        k = 1
+        for a in self.worker_axes:
+            k *= self.mesh.shape[a]
+        return k
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def make_plan(arch: ArchConfig, mesh: Mesh, *, multi_pod: bool,
+              mode: Optional[str] = None) -> ShardingPlan:
+    mode = mode or arch.parallel.worker_mode
+    if mode == "stacked":
+        worker = ("pod", "data") if multi_pod else ("data",)
+        inner: Tuple[Tuple[str, ...], ...] = (("model",),)
+        batch_axes: Tuple[str, ...] = ()
+    elif mode == "pods":
+        worker = ("pod",) if multi_pod else ()
+        inner = (("data",), ("model",))
+        batch_axes = ("data",)
+    elif mode == "global":
+        worker = ()
+        inner = ((("pod", "data") if multi_pod else ("data",)), ("model",))
+        inner = tuple(tuple(g) if isinstance(g, tuple) else (g,)
+                      for g in inner)
+        batch_axes = ("pod", "data") if multi_pod else ("data",)
+    else:
+        raise ValueError(f"unknown worker mode {mode!r}")
+    # serving: no worker dim; small archs keep params TP-only, big archs FSDP
+    if mode == "stacked":
+        serve_groups: Tuple[Tuple[str, ...], ...] = (("model",),)
+    else:
+        serve_groups = ((("pod", "data") if multi_pod else ("data",)),
+                        ("model",))
+        serve_groups = tuple(tuple(g) if isinstance(g, tuple) else (g,)
+                             for g in serve_groups)
+    serve_batch = ("pod", "data") if multi_pod else ("data",)
+    return ShardingPlan(mesh, mode, multi_pod, worker, inner, batch_axes,
+                        serve_groups, serve_batch, arch.model)
+
+
+# ------------------------------ rule engine ----------------------------------
+
+
+def _assign_groups(shape: Sequence[int],
+                   groups: Sequence[Tuple[str, ...]],
+                   mesh: Mesh,
+                   skip: Sequence[int] = ()) -> List[Any]:
+    """Greedy dim->axis-group assignment. Returns PartitionSpec entries."""
+    entries: List[Any] = [None] * len(shape)
+    taken = set(skip)
+    sizes = {g: int(np.prod([mesh.shape[a] for a in g])) for g in groups}
+    for g in sorted(groups, key=lambda g: -sizes[g]):
+        cand = [(d, shape[d]) for d in range(len(shape))
+                if d not in taken and shape[d] % sizes[g] == 0
+                and shape[d] >= sizes[g] and sizes[g] > 1]
+        if not cand:
+            continue
+        d = max(cand, key=lambda t: t[1])[0]
+        entries[d] = g if len(g) > 1 else g[0]
+        taken.add(d)
+    return entries
+
+
+def _path_names(path) -> List[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _head_aware_rule(plan: ShardingPlan, leaf: str) -> str:
+    """'col' (default greedy), 'row' (shard the input dim on 'model'), or
+    'replicate' for the 'model' axis component of this leaf.
+
+    Column-sharding an attention projection's fused (heads x head_dim)
+    output dim is only sound when the head count divides the model axis —
+    otherwise GSPMD splits head_dim and every score contraction becomes a
+    partial-sum ALL-REDUCE OF THE SCORE TENSOR (measured 2.3 TB/step on
+    llama3.2-1b prefill_32k; see EXPERIMENTS.md perf iteration 1). Same
+    story for RWKV's per-head projections and Mamba's segmented in_proj
+    (whose z/xBC/dt split crosses shard boundaries).
+    """
+    cfg = plan.model_cfg
+    if cfg is None:
+        return "col"
+    msz = plan.mesh.shape.get("model", 1)
+    if msz <= 1:
+        return "col"
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    # Only intervene where measured to help (§Perf iterations 1 and 7):
+    # 1. small GQA K/V projections with kv_heads not dividing the model
+    #    axis are REPLICATED (removes the per-layer partial-sum all-reduce
+    #    and, crucially, the head_dim-split that turned every score
+    #    contraction into a TB-scale all-reduce);
+    # 2. everything else keeps the greedy layout — forcing row-parallel on
+    #    MHA-sized projections measurably regressed qwen1.5-32b (Tc 19->50,
+    #    iteration 7's refuted branch, kept in the log).
+    if leaf in ("wk", "wv"):
+        if cfg.n_kv_heads % msz == 0:
+            return "col"
+        return ("replicate" if cfg.n_kv_heads * hd * 2 <= cfg.d_model
+                else "col")
+    if leaf in ("bk", "bv") and cfg.n_kv_heads % msz != 0:
+        return "replicate"
+    if leaf in ("u", "gn", "gn_b") and cfg.family == "ssm":
+        return "replicate"
+    if leaf in ("in_proj", "out_proj") and cfg.family in ("hybrid",):
+        return "row"
+    if leaf in ("conv_w", "conv_b", "A_log", "D", "dt_bias") \
+            and cfg.family in ("hybrid",):
+        return "replicate"
+    return "col"
+
+
+def param_pspec(plan: ShardingPlan, path, shape: Tuple[int, ...],
+                *, stacked: bool, serve: bool = False) -> P:
+    """PartitionSpec for a parameter/optimizer-state leaf.
+
+    stacked=True: leaf has a leading worker dim (training state).
+    serve=True: use the serving groups and no worker dim.
+    """
+    if len(shape) == 0:
+        return P()
+    names = _path_names(path)
+    entries: List[Any] = []
+    skip = []
+    d0 = 0
+    if stacked and not serve:
+        wa = plan.worker_axes
+        if wa and shape[0] % plan.K == 0 and plan.K > 1:
+            entries.append(tuple(wa) if len(wa) > 1 else wa[0])
+        else:
+            entries.append(None)
+        d0 = 1
+    if any(k in names for k in _LAYER_STACK_KEYS) and len(shape) > d0:
+        skip.append(d0)
+    groups = plan.serve_groups if serve else plan.inner_groups
+    rule = _head_aware_rule(plan, names[-1] if names else "")
+    inner_shape = shape[d0:]
+    inner_skip = [s - d0 for s in skip]
+    if rule == "replicate":
+        groups = tuple(g for g in groups if "model" not in g)
+        inner = _assign_groups(inner_shape, groups, plan.mesh,
+                               skip=inner_skip)
+    elif rule == "row" and len(inner_shape) - len(inner_skip) >= 2:
+        # force 'model' onto the matrix input dim (first non-skipped dim)
+        msz = plan.mesh.shape.get("model", 1)
+        row_dim = next(i for i in range(len(inner_shape))
+                       if i not in inner_skip)
+        inner = [None] * len(inner_shape)
+        extra_skip = list(inner_skip)
+        if inner_shape[row_dim] % msz == 0 and msz > 1:
+            inner[row_dim] = "model"
+            extra_skip.append(row_dim)
+        rest_groups = tuple(g for g in groups if "model" not in g)
+        rest = _assign_groups(inner_shape, rest_groups, plan.mesh,
+                              skip=extra_skip)
+        inner = [a if a is not None else b for a, b in zip(inner, rest)]
+    else:
+        inner = _assign_groups(inner_shape, groups, plan.mesh,
+                               skip=inner_skip)
+    return P(*(entries + list(inner)))
+
+
+def tree_shardings(plan: ShardingPlan, sds_tree: PyTree, *, stacked: bool,
+                   serve: bool = False) -> PyTree:
+    """NamedShardings for a whole state/param ShapeDtypeStruct tree."""
+
+    def rule(path, leaf):
+        spec = param_pspec(plan, path, leaf.shape, stacked=stacked,
+                           serve=serve)
+        return NamedSharding(plan.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, sds_tree)
+
+
+# ------------------------------ batch specs ----------------------------------
+
+
+def train_batch_pspec(plan: ShardingPlan, shape: Tuple[int, ...]) -> P:
+    """Batch leaves are (p, K, b, ...): p unsharded, K on worker axes, b on
+    plan.batch_axes (when divisible)."""
+    entries: List[Any] = [None]
+    wa = plan.worker_axes
+    if wa and plan.K > 1 and shape[1] % plan.K == 0:
+        entries.append(tuple(wa) if len(wa) > 1 else wa[0])
+    else:
+        entries.append(None)
+    ba = tuple(a for a in plan.batch_axes if a not in wa)
+    bsz = int(np.prod([plan.mesh.shape[a] for a in ba])) if ba else 1
+    if ba and shape[2] % bsz == 0 and bsz > 1:
+        entries.append(tuple(ba) if len(ba) > 1 else ba[0])
+    else:
+        entries.append(None)
+    entries.extend([None] * (len(shape) - 3))
+    return P(*entries)
+
+
+def serve_batch_pspec(plan: ShardingPlan, shape: Tuple[int, ...],
+                      *, seq_dim: Optional[int] = None) -> P:
+    """Serve-side tensors: batch dim 0 over serve axes; if batch is too
+    small (long-context B=1), shard ``seq_dim`` over the 'data' axes
+    instead (sequence-parallel cache)."""
+    entries: List[Any] = [None] * len(shape)
+    ba = plan.serve_batch_axes
+    bsz = plan.axis_size(ba)
+    if shape and shape[0] % bsz == 0 and shape[0] >= bsz and bsz > 1:
+        entries[0] = tuple(ba) if len(ba) > 1 else ba[0]
+    elif seq_dim is not None and shape[seq_dim] % bsz == 0:
+        entries[seq_dim] = tuple(ba) if len(ba) > 1 else ba[0]
+    return P(*entries)
+
+
+def cache_shardings(plan: ShardingPlan, cache_sds: PyTree) -> PyTree:
+    """KV/SSM cache shardings: leaves are (L_or_sites, B, S_or_state...).
+
+    dim0 (layer stack) stays local; batch (dim1) over serve axes when
+    divisible, else the sequence dim (dim2, when present) is sharded —
+    the sequence-parallel long-context decode path. A trailing dim
+    divisible by 'model' is sharded over 'model'."""
+    mesh = plan.mesh
+    ba = plan.serve_batch_axes
+    bsz = plan.axis_size(ba)
+    model = mesh.shape["model"]
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        entries: List[Any] = [None] * len(shape)
+        batch_ok = shape[1] % bsz == 0 and shape[1] >= bsz and bsz > 1
+        if batch_ok:
+            entries[1] = tuple(ba) if len(ba) > 1 else ba[0]
+        elif len(shape) >= 3:
+            # sequence-parallel: shard the biggest middle dim on 'data'
+            data_axes = tuple(a for a in ba if a != "model")
+            dsz = plan.axis_size(data_axes)
+            if len(shape) >= 3 and shape[2] % dsz == 0 and dsz > 1:
+                entries[2] = (tuple(data_axes) if len(data_axes) > 1
+                              else data_axes[0])
+        # one trailing dim on 'model'
+        for d in range(len(shape) - 1, 1, -1):
+            if entries[d] is None and shape[d] % model == 0 \
+                    and shape[d] >= model and model > 1 and d != 2:
+                entries[d] = "model"
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_sds)

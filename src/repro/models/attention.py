@@ -1,0 +1,367 @@
+"""Grouped-query attention with RoPE, sliding windows, KV caches.
+
+The einsum ('xla') path is what the production dry-run lowers — GSPMD
+partitions it over the ('data','model') mesh (heads on 'model'; for the
+long-context decode shapes the cache *sequence* dim is sharded and XLA
+inserts the stable partial-softmax collectives). A Pallas flash-attention
+kernel targeting TPU VMEM tiling lives in ``repro.kernels.flash_attention``
+and is selected with ``impl='pallas'`` (validated in interpret mode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+# ------------------------ activation sharding hints -------------------------
+# The serving launcher scopes this context while TRACING prefill/decode so
+# q/k/v get explicit head-sharded (or replicated) constraints — without it
+# GSPMD may split head_dim for GQA head counts that don't divide the model
+# axis and partial-sum the SCORE tensor (measured 2.3 TB/step; EXPERIMENTS.md
+# perf iteration 1). Outside the context (tests, CPU training) it is a no-op.
+
+import contextlib as _contextlib
+
+import numpy as _np
+
+_ACT_CTX: dict = {"mesh": None, "batch_axes": None}
+
+
+@_contextlib.contextmanager
+def activation_sharding(mesh, batch_axes=()):
+    old = dict(_ACT_CTX)
+    _ACT_CTX.update(mesh=mesh, batch_axes=tuple(batch_axes or ()))
+    try:
+        yield
+    finally:
+        _ACT_CTX.update(old)
+
+
+def _shard_heads(x: jax.Array, allow_replicate: bool = False) -> jax.Array:
+    """Constrain (B, S, H, D): batch over the serve data axes, heads over
+    'model' when divisible. When heads do NOT divide the axis: explicitly
+    replicate only if the caller says redundant compute is cheap
+    (allow_replicate — small GQA K/V); otherwise leave GSPMD free (forcing
+    replication of full-width q for 40-head MHA costs 16x redundant
+    attention compute — measured on qwen1.5-32b, §Perf iteration 7)."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None or x.ndim != 4:
+        return x
+    msz = dict(mesh.shape).get("model", 1)
+    if msz <= 1:
+        return x
+    if x.shape[2] % msz != 0 and not allow_replicate:
+        return x
+    ba = _ACT_CTX["batch_axes"]
+    b_entry = None
+    if ba:
+        bsz = int(_np.prod([dict(mesh.shape)[a] for a in ba]))
+        if bsz > 1 and x.shape[0] % bsz == 0 and x.shape[0] >= bsz:
+            b_entry = tuple(ba) if len(ba) > 1 else ba[0]
+    h_entry = "model" if x.shape[2] % msz == 0 else None
+    from jax.sharding import NamedSharding, PartitionSpec
+    spec = PartitionSpec(b_entry, None, h_entry, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, qkv_bias: bool = False) -> PyTree:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": common.dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": common.dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": common.dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params: PyTree, x: jax.Array, n_heads: int, n_kv: int,
+                 head_dim: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    d_in = x.shape[-1]
+    kv_cheap = n_kv * head_dim * 2 <= d_in
+    return (_shard_heads(q.reshape(B, S, n_heads, head_dim)),
+            _shard_heads(k.reshape(B, S, n_kv, head_dim),
+                         allow_replicate=kv_cheap),
+            _shard_heads(v.reshape(B, S, n_kv, head_dim),
+                         allow_replicate=kv_cheap))
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,S,Hq,D), k (B,T,Hk,D) -> scores (B,Hk,G,S,T)."""
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, S, Hk, G, D)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                      preferred_element_type=jnp.float32) / math.sqrt(D)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs (B,Hk,G,S,T), v (B,T,Hk,D) -> (B,S,Hq*D)."""
+    B, Hk, G, S, T = probs.shape
+    D = v.shape[-1]
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, Hk * G * D)
+
+
+def _mask_scores(scores: jax.Array, q_pos: jax.Array, k_pos: jax.Array,
+                 causal: bool, window: int,
+                 k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Apply causal / sliding-window / validity masks in f32 score space.
+
+    q_pos (S,), k_pos (T,) absolute positions; window > 0 keeps keys with
+    q_pos - k_pos < window (plus causality).
+    """
+    S, T = scores.shape[-2], scores.shape[-1]
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = ok & (dk <= dq)
+    if window and window > 0:
+        ok = ok & (dq - dk < window)
+    mask = jnp.where(ok, 0.0, NEG_INF)
+    scores = scores + mask
+    if k_valid is not None:  # (B, T) per-batch validity (cache fill level)
+        scores = scores + jnp.where(k_valid, 0.0,
+                                    NEG_INF)[:, None, None, None, :]
+    return scores
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0,
+                        chunk_q: int = 2048, chunk_kv: int = 2048
+                        ) -> jax.Array:
+    """Online-softmax attention tiled in pure XLA ("flash-in-XLA").
+
+    Never materializes the (S, T) score matrix: a python loop tiles the
+    query dim (static, HLO size O(S/chunk_q)); a ``lax.scan`` tiles the KV
+    dim with carried (acc, max, sumexp). Causal/window structure prunes KV
+    chunks *statically*, so the compiled HLO's flop and byte counts reflect
+    the sparsity. The scan body is rematerialized so the backward pass
+    recomputes per-tile scores instead of saving them.
+
+    q: (B, S, Hq, D); k, v: (B, T, Hk, D). Returns (B, S, Hq, D) in q.dtype.
+    """
+    B, S, Hq, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    cq = min(chunk_q, S)
+    while S % cq:
+        cq -= 1
+    ckv = min(chunk_kv, T)
+    while T % ckv:
+        ckv -= 1
+    n_kv = T // ckv
+    scale = 1.0 / math.sqrt(D)
+
+    def q_chunk_attn(qc: jax.Array, q_pos0: int):
+        """qc: (B, cq, Hk, G, D) -> (B, cq, Hk, G, D)."""
+        q_pos = q_pos0 + jnp.arange(cq)
+        # static KV-chunk range for this q chunk
+        lo_chunk = 0
+        hi_chunk = n_kv
+        if causal:
+            hi_chunk = min(n_kv, (q_pos0 + cq + ckv - 1) // ckv)
+        if window and window > 0:
+            lo_chunk = max(0, (q_pos0 - window + 1) // ckv)
+        idxs = jnp.arange(lo_chunk, hi_chunk)
+
+        def body(carry, j):
+            acc, m, l = carry
+            k_c = jax.lax.dynamic_slice_in_dim(k, j * ckv, ckv, axis=1)
+            v_c = jax.lax.dynamic_slice_in_dim(v, j * ckv, ckv, axis=1)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, k_c,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = j * ckv + jnp.arange(ckv)
+            ok = jnp.ones((cq, ckv), bool)
+            if causal:
+                ok = ok & (k_pos[None, :] <= q_pos[:, None])
+            if window and window > 0:
+                ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+            s = s + jnp.where(ok, 0.0, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v_c.dtype), v_c)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (acc_new, m_new, l_new), ()
+
+        body = jax.checkpoint(body)
+        acc0 = jnp.zeros((B, Hk, G, cq, D), jnp.float32)
+        m0 = jnp.full((B, Hk, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), idxs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, Hk, G, cq, D) -> (B, cq, Hk, G, D)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)
+
+    qg = q.reshape(B, S, Hk, G, D)
+    outs = []
+    for i in range(S // cq):
+        qc = jax.lax.slice_in_dim(qg, i * cq, (i + 1) * cq, axis=1)
+        outs.append(q_chunk_attn(qc, q_offset + i * cq))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, S, Hq, D)
+
+
+# S*T threshold above which 'auto' picks the tiled online-softmax path
+AUTO_CHUNK_THRESHOLD = 2048 * 2048
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+         window: int = 0, q_offset: int = 0, impl: str = "auto"
+         ) -> jax.Array:
+    """Scaled-dot-product attention dispatcher.
+
+    impl: 'naive' (materialized scores), 'chunked' (flash-in-XLA, never
+    materializes S x T), 'pallas' (TPU kernel), 'auto' (chunked when the
+    score matrix would exceed AUTO_CHUNK_THRESHOLD elements per head).
+    Returns (B, S, Hq*D)."""
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    if impl == "auto":
+        impl = "chunked" if S * T >= AUTO_CHUNK_THRESHOLD else "naive"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    elif impl == "chunked":
+        out = flash_attention_xla(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+    else:
+        q_pos = q_offset + jnp.arange(S)
+        k_pos = jnp.arange(T)
+        scores = _gqa_scores(q, k)
+        scores = _mask_scores(scores, q_pos, k_pos, causal, window)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v).reshape(B, S, Hq, D)
+    return out.reshape(B, S, Hq * D)
+
+
+def attention_forward(params: PyTree, x: jax.Array, *, n_heads: int,
+                      n_kv_heads: int, head_dim: int, rope_theta: float,
+                      causal: bool = True, window: int = 0,
+                      positions: Optional[jax.Array] = None,
+                      use_rope: bool = True,
+                      impl: str = "auto") -> jax.Array:
+    """Full-sequence attention (training / prefill). x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos = positions if positions is not None else jnp.arange(S)
+    if use_rope:
+        q = common.apply_rope(q, jnp.broadcast_to(pos, (B, S)), rope_theta)
+        k = common.apply_rope(k, jnp.broadcast_to(pos, (B, S)), rope_theta)
+    out = sdpa(q, k, v, causal=causal, window=window, impl=impl)
+    return out @ params["wo"].astype(out.dtype)
+
+
+def cross_attention_forward(params: PyTree, x: jax.Array, kv: jax.Array, *,
+                            n_heads: int, n_kv_heads: int, head_dim: int
+                            ) -> jax.Array:
+    """Encoder-decoder cross attention (whisper). kv: (B, T, d_model)."""
+    B, S, _ = x.shape
+    T = kv.shape[1]
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, n_heads, head_dim)
+    k = (kv @ params["wk"].astype(dt)).reshape(B, T, n_kv_heads, head_dim)
+    v = (kv @ params["wv"].astype(dt)).reshape(B, T, n_kv_heads, head_dim)
+    out = sdpa(q, k, v, causal=False)
+    return out @ params["wo"].astype(out.dtype)
+
+
+# ------------------------------ KV cache ------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache.
+
+    k, v: (L, B, S_max, n_kv, head_dim). ``index``: next write position
+    (scalar). For sliding-window archs S_max = window and writes wrap
+    (rotating cache), keeping the decode cost sub-quadratic and the cache
+    O(window).
+    """
+    k: jax.Array
+    v: jax.Array
+    index: jax.Array  # scalar int32: number of tokens already cached
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(n_layers: int, batch: int, max_len: int, n_kv: int,
+                  head_dim: int, dtype) -> KVCache:
+    shape = (n_layers, batch, max_len, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def decode_attention(params: PyTree, x: jax.Array, layer_k: jax.Array,
+                     layer_v: jax.Array, index: jax.Array, *, n_heads: int,
+                     n_kv_heads: int, head_dim: int, rope_theta: float,
+                     window: int = 0, rotating: bool = False,
+                     use_rope: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a cache slice.
+
+    x: (B, 1, d_model); layer_k/v: (B, S_max, n_kv, hd). Returns
+    (out (B,1,d_model), new_k, new_v). ``index`` is the absolute position of
+    the new token; with ``rotating`` the write slot is index % S_max.
+    """
+    B = x.shape[0]
+    S_max = layer_k.shape[1]
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos_new = jnp.full((B, 1), index, dtype=jnp.int32)
+    if use_rope:
+        q = common.apply_rope(q, pos_new, rope_theta)
+        k_new = common.apply_rope(k_new, pos_new, rope_theta)
+    slot = (index % S_max) if rotating else index
+    layer_k = jax.lax.dynamic_update_slice(
+        layer_k, k_new.astype(layer_k.dtype), (0, slot, 0, 0))
+    layer_v = jax.lax.dynamic_update_slice(
+        layer_v, v_new.astype(layer_v.dtype), (0, slot, 0, 0))
+
+    # absolute positions held in each cache slot
+    slots = jnp.arange(S_max)
+    if rotating:
+        # slot s holds absolute position: the largest q <= index with
+        # q % S_max == s
+        cur = index
+        abs_pos = cur - ((cur - slots) % S_max)
+        valid = abs_pos >= jnp.maximum(0, cur - S_max + 1)
+    else:
+        abs_pos = slots
+        valid = slots <= index
+    if window and window > 0:
+        valid = valid & (index - abs_pos < window)
+
+    scores = _gqa_scores(q, layer_k)  # (B, Hk, G, 1, S_max)
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, layer_v)
+    out = out @ params["wo"].astype(out.dtype)
+    return out, layer_k, layer_v

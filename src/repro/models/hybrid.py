@@ -1,0 +1,259 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba2 backbone with a single
+*shared* attention+MLP block invoked periodically.
+
+Assigned config zamba2-7b: 81 Mamba2 layers (d_model=3584, ssm_state=64),
+shared GQA attention block (32 heads) + SwiGLU MLP (d_ff=14336) re-applied
+every ``shared_attn_period`` layers with the same weights (Zamba2's weight
+sharing; we omit the per-invocation LoRA deltas — noted in DESIGN.md).
+
+Layers run as segment-wise ``lax.scan``s (segments split at shared-block
+insertion points) so an 81-layer model compiles as a handful of scan bodies.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mamba2, mlp
+
+PyTree = Any
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    k_emb, k_layers, k_attn, k_mlp, k_head = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    layers = jax.vmap(lambda k: mamba2.init_layer(k, cfg))(
+        jax.random.split(k_layers, cfg.n_layers))
+    shared = {
+        "attn": attention.init_attention(
+            k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dt),
+        "mlp": mlp.init_swiglu(k_mlp, cfg.d_model, cfg.d_ff, dt),
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+    }
+    return {
+        "embed": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": common.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _segments(n_layers: int, period: int):
+    """Split [0, n_layers) into chunks; a shared attn block follows each
+    chunk except possibly the last partial one."""
+    if period <= 0:
+        return [(0, n_layers, False)]
+    segs = []
+    start = 0
+    while start < n_layers:
+        end = min(start + period, n_layers)
+        segs.append((start, end, end - start == period))
+        start = end
+    return segs
+
+
+class HybridCache(NamedTuple):
+    conv: jax.Array          # (L, B, k-1, di+2N)
+    ssm: jax.Array           # (L, B, H, P, N)
+    attn_k: jax.Array        # (A, B, S_max, n_kv, hd) — per shared-attn site
+    attn_v: jax.Array
+    index: jax.Array
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return sum(1 for s in _segments(cfg.n_layers, cfg.shared_attn_period)
+               if s[2])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> HybridCache:
+    st = mamba2.init_state(cfg, batch)
+    L = cfg.n_layers
+    A = n_attn_sites(cfg)
+    hd = cfg.resolved_head_dim
+    return HybridCache(
+        jnp.broadcast_to(st.conv, (L,) + st.conv.shape),
+        jnp.broadcast_to(st.ssm, (L,) + st.ssm.shape),
+        jnp.zeros((A, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        jnp.zeros((A, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        jnp.zeros((), jnp.int32))
+
+
+def _shared_block(shared: PyTree, h: jax.Array, cfg: ModelConfig,
+                  positions) -> jax.Array:
+    hn = common.rms_norm(h, shared["norm1"], cfg.norm_eps)
+    h = h + attention.attention_forward(
+        shared["attn"], hn, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        causal=True, positions=positions)
+    hn = common.rms_norm(h, shared["norm2"], cfg.norm_eps)
+    return h + mlp.swiglu_forward(shared["mlp"], hn)
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+            cache: Optional[HybridCache] = None, remat: str = "none"
+            ) -> Tuple[jax.Array, PyTree]:
+    """Training/prefill forward over the full sequence."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cache is None:
+        st = mamba2.init_state(cfg, B)
+        conv_all = jnp.broadcast_to(st.conv, (cfg.n_layers,) + st.conv.shape)
+        ssm_all = jnp.broadcast_to(st.ssm, (cfg.n_layers,) + st.ssm.shape)
+        start = 0
+    else:
+        conv_all, ssm_all = cache.conv, cache.ssm
+        start = cache.index
+
+    positions = jnp.arange(S) + (0 if cache is None else start)
+
+    def seg_body(carry, xs):
+        h = carry
+        layer, cs, ss = xs
+        h, new_state = mamba2.layer_forward(
+            layer, h, cfg, mamba2.MambaState(cs, ss))
+        return h, (new_state.conv, new_state.ssm)
+
+    if remat != "none":
+        seg_body = jax.checkpoint(seg_body)
+
+    new_conv, new_ssm = [], []
+    for (s0, s1, has_attn) in _segments(cfg.n_layers,
+                                        cfg.shared_attn_period):
+        seg_layers = jax.tree_util.tree_map(lambda a: a[s0:s1],
+                                            params["layers"])
+        h, (cseg, sseg) = jax.lax.scan(
+            seg_body, h, (seg_layers, conv_all[s0:s1], ssm_all[s0:s1]))
+        new_conv.append(cseg)
+        new_ssm.append(sseg)
+        if has_attn:
+            h = _shared_block(params["shared"], h, cfg, positions)
+
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(h.dtype)
+    states = (jnp.concatenate(new_conv), jnp.concatenate(new_ssm))
+    return logits, states
+
+
+def loss_fn(params: PyTree, batch: PyTree, cfg: ModelConfig, *,
+            remat: str = "none") -> jax.Array:
+    tokens = batch["tokens"]
+    logits, _ = forward(params, tokens[:, :-1], cfg, remat=remat)
+    return common.cross_entropy_loss(logits, tokens[:, 1:],
+                                     batch.get("mask"))
+
+
+# --------------------------- prefill / decode -------------------------------
+
+
+def prefill(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+            cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, HybridCache]:
+    """Full-sequence prefill that also fills the shared-attn KV sites."""
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    st = mamba2.init_state(cfg, B)
+    positions = jnp.arange(S)
+
+    def seg_body(carry, xs):
+        h = carry
+        layer, cs, ss = xs
+        h, new_state = mamba2.layer_forward(
+            layer, h, cfg, mamba2.MambaState(cs, ss))
+        return h, (new_state.conv, new_state.ssm)
+
+    new_conv, new_ssm, aks, avs = [], [], [], []
+    for (s0, s1, has_attn) in _segments(cfg.n_layers,
+                                        cfg.shared_attn_period):
+        seg_layers = jax.tree_util.tree_map(lambda a: a[s0:s1],
+                                            params["layers"])
+        conv0 = jnp.broadcast_to(st.conv, (s1 - s0,) + st.conv.shape)
+        ssm0 = jnp.broadcast_to(st.ssm, (s1 - s0,) + st.ssm.shape)
+        h, (cseg, sseg) = jax.lax.scan(seg_body, h, (seg_layers, conv0, ssm0))
+        new_conv.append(cseg)
+        new_ssm.append(sseg)
+        if has_attn:
+            sh = params["shared"]
+            hn = common.rms_norm(h, sh["norm1"], cfg.norm_eps)
+            q, k, v = attention._project_qkv(
+                sh["attn"], hn, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim)
+            pos_b = jnp.broadcast_to(positions, (B, S))
+            q = common.apply_rope(q, pos_b, cfg.rope_theta)
+            k = common.apply_rope(k, pos_b, cfg.rope_theta)
+            ao = attention.sdpa(q, k, v, causal=True,
+                                window=cfg.sliding_window)
+            h = h + ao @ sh["attn"]["wo"].astype(ao.dtype)
+            hn = common.rms_norm(h, sh["norm2"], cfg.norm_eps)
+            h = h + mlp.swiglu_forward(sh["mlp"], hn)
+            pad = cache_len - S
+            aks.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))))
+            avs.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1:, :] @ params["lm_head"].astype(h.dtype))
+    cache = HybridCache(
+        jnp.concatenate(new_conv), jnp.concatenate(new_ssm),
+        jnp.stack(aks) if aks else jnp.zeros(
+            (0, B, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim),
+            cfg.compute_dtype),
+        jnp.stack(avs) if avs else jnp.zeros(
+            (0, B, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim),
+            cfg.compute_dtype),
+        jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: PyTree, cache: HybridCache, token: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, HybridCache]:
+    B = token.shape[0]
+    h = params["embed"][token[:, None]].astype(cfg.compute_dtype)
+    index = cache.index
+
+    def seg_body(carry, xs):
+        h = carry
+        layer, cs, ss = xs
+        h, new_state = mamba2.layer_forward(
+            layer, h, cfg, mamba2.MambaState(cs, ss))
+        return h, (new_state.conv, new_state.ssm)
+
+    new_conv, new_ssm = [], []
+    new_ak, new_av = [], []
+    site = 0
+    for (s0, s1, has_attn) in _segments(cfg.n_layers,
+                                        cfg.shared_attn_period):
+        seg_layers = jax.tree_util.tree_map(lambda a: a[s0:s1],
+                                            params["layers"])
+        h, (cseg, sseg) = jax.lax.scan(
+            seg_body, h, (seg_layers, cache.conv[s0:s1], cache.ssm[s0:s1]))
+        new_conv.append(cseg)
+        new_ssm.append(sseg)
+        if has_attn:
+            sh = params["shared"]
+            hn = common.rms_norm(h, sh["norm1"], cfg.norm_eps)
+            ao, nk, nv = attention.decode_attention(
+                sh["attn"], hn, cache.attn_k[site], cache.attn_v[site],
+                index, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta)
+            h = h + ao
+            hn = common.rms_norm(h, sh["norm2"], cfg.norm_eps)
+            h = h + mlp.swiglu_forward(sh["mlp"], hn)
+            new_ak.append(nk)
+            new_av.append(nv)
+            site += 1
+
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ params["lm_head"].astype(h.dtype))[:, 0, :]
+    new_cache = HybridCache(
+        jnp.concatenate(new_conv), jnp.concatenate(new_ssm),
+        jnp.stack(new_ak) if new_ak else cache.attn_k,
+        jnp.stack(new_av) if new_av else cache.attn_v,
+        index + 1)
+    return logits, new_cache

@@ -1,0 +1,126 @@
+"""Mamba2 (SSD) block — substrate for the zamba2-7b hybrid arch.
+
+Per layer (n_groups = 1, faithful to the Mamba2 structure):
+
+  [z, xBC, dt] = x @ W_in
+  xBC = silu(causal_depthwise_conv(xBC, k=4))
+  x_s (H, P), B (N), C (N);  dt = softplus(dt + dt_bias);  a = exp(-exp(A)dt)
+  h_t = a_t * h_{t-1} + (dt_t * x_t) (x) B_t          h: (H, P, N)
+  y_t = h_t . C_t + D * x_t
+  out = W_out( rmsnorm(y) * silu(z) )
+
+State is O(H*P*N) independent of context — zamba2 runs long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+PyTree = Any
+
+
+def init_layer(key, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.resolved_ssm_heads
+    ck = cfg.ssm_conv
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * N + H
+    return {
+        "norm": jnp.ones((d,), dt),
+        "in_proj": common.dense_init(ks[0], d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (ck, di + 2 * N), jnp.float32)
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * N,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),      # a = exp(-exp(A_log)*dt)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gn": jnp.ones((di,), dt),
+        "out_proj": common.dense_init(ks[2], di, d, dt),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, k-1, di + 2N) — trailing conv inputs
+    ssm: jax.Array    # (B, H, P, N) f32
+
+
+def init_state(cfg: ModelConfig, batch: int) -> MambaState:
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = cfg.resolved_ssm_heads
+    P = di // H
+    return MambaState(
+        jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), cfg.compute_dtype),
+        jnp.zeros((batch, H, P, N), jnp.float32))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, S, C); w: (k, C); prev: (B, k-1, C).
+    Returns (out (B,S,C), new_prev)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B, S+k-1, C)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(
+            x.dtype)
+    new_prev = xp[:, -(k - 1):, :] if k > 1 else prev
+    return out + b.astype(x.dtype), new_prev
+
+
+def ssd_scan(x, dt, a, Bm, Cm, state):
+    """x: (B,S,H,P); dt,a: (B,S,H); Bm,Cm: (B,S,N); state: (B,H,P,N)."""
+    x, dt, a, Bm, Cm = (t.astype(jnp.float32) for t in (x, dt, a, Bm, Cm))
+
+    def step(h, inp):
+        x_t, dt_t, a_t, b_t, c_t = inp
+        upd = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        h = a_t[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, a, Bm, Cm))
+    state, ys = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(ys, 0, 1), state  # (B,S,H,P), (B,H,P,N)
+
+
+def layer_forward(layer: PyTree, h: jax.Array, cfg: ModelConfig,
+                  state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """Pre-norm residual Mamba2 block. h: (B, S, d)."""
+    B, S, d = h.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = cfg.resolved_ssm_heads
+    P = di // H
+    dtype = h.dtype
+
+    hn = common.rms_norm(h, layer["norm"], cfg.norm_eps)
+    zxbcdt = hn @ layer["in_proj"].astype(dtype)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt_raw = zxbcdt[..., -H:]
+
+    xBC, new_conv = _causal_conv(xBC, layer["conv_w"], layer["conv_b"],
+                                 state.conv)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(dtype)
+    x_s = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + layer["dt_bias"][None, None, :])
+    a = jnp.exp(-jnp.exp(layer["A_log"])[None, None, :] * dt_v)
+
+    y, new_ssm = ssd_scan(x_s, dt_v, a, Bm, Cm, state.ssm)
+    y = y + layer["D"][None, None, :, None] * x_s.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = common.rms_norm(y.astype(dtype), layer["gn"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    out = y @ layer["out_proj"].astype(dtype)
+    return h + out, MambaState(new_conv, new_ssm)

@@ -1,0 +1,52 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (starcoder/whisper)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+PyTree = Any
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype) -> PyTree:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": common.dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": common.dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": common.dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu_forward(params: PyTree, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = x @ params["w_gate"].astype(dt)
+    up = x @ params["w_up"].astype(dt)
+    return common.swiglu(gate, up) @ params["w_down"].astype(dt)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype,
+                  bias: bool = True) -> PyTree:
+    ks = jax.random.split(key, 2)
+    p = {
+        "w_in": common.dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": common.dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def gelu_mlp_forward(params: PyTree, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = x @ params["w_in"].astype(dt)
+    if "b_in" in params:
+        h = h + params["b_in"].astype(dt)
+    h = common.gelu(h)
+    out = h @ params["w_out"].astype(dt)
+    if "b_out" in params:
+        out = out + params["b_out"].astype(dt)
+    return out

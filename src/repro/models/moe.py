@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN with top-k routing and grouped capacity dispatch.
+
+GShard-style: tokens are split into groups of ``group_size``; each group
+dispatches independently to per-expert capacity buffers via one-hot einsums,
+so dispatch memory is O(N * group_size * top_k * capacity_factor) — linear
+in token count — and every shape is static. Expert weights are stacked
+(E, d, d_ff) and sharded over the 'model' mesh axis on the expert dim
+(expert parallelism); the dispatch/combine einsums lower to all-to-all under
+GSPMD. Routing returns a Switch-style auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+PyTree = Any
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype) -> PyTree:
+    ks = jax.random.split(key, 4)
+    def ew(k, di, do):
+        return (jax.random.normal(k, (n_experts, di, do), jnp.float32)
+                * (1.0 / jnp.sqrt(di))).astype(dtype)
+    return {
+        "router": common.dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_gate": ew(ks[1], d_model, d_ff),
+        "w_up": ew(ks[2], d_model, d_ff),
+        "w_down": ew(ks[3], d_ff, d_model),
+    }
+
+
+def moe_forward(params: PyTree, x: jax.Array, *, top_k: int,
+                capacity_factor: float = 1.25, group_size: int = 1024
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E = params["router"].shape[-1]
+    N = B * S
+    g = min(group_size, N)
+    while N % g:           # static: shrink group size to divide token count
+        g -= 1
+    G = N // g
+    C = max(4, int(g * top_k * capacity_factor / E))
+    C = min(C, g)
+    xf = x.reshape(G, g, d)
+
+    logits = jnp.einsum("Gnd,dE->GnE", xf.astype(jnp.float32),
+                        params["router"])                          # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)              # (G,g,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # rank of each (token, choice) within its expert, per group
+    exp_oh_i = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)        # (G,g,k,E)
+    flat = exp_oh_i.reshape(G, g * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos * flat, axis=-1)                             # (G, g*k)
+    keep = pos < C
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                             dtype=xf.dtype)[..., :C]              # (G,g*k,C)
+    exp_oh = flat.astype(xf.dtype)                                 # (G,g*k,E)
+    pair = exp_oh[..., :, None] * slot_oh[..., None, :]            # (G,gk,E,C)
+    disp = pair.reshape(G, g, top_k, E, C).sum(axis=2)             # (G,g,E,C)
+
+    expert_in = jnp.einsum("Gnec,Gnd->Gecd", disp, xf)             # (G,E,C,d)
+    h = common.swiglu(
+        jnp.einsum("Gecd,edf->Gecf", expert_in, params["w_gate"].astype(xf.dtype)),
+        jnp.einsum("Gecd,edf->Gecf", expert_in, params["w_up"].astype(xf.dtype)))
+    expert_out = jnp.einsum("Gecf,efd->Gecd", h, params["w_down"].astype(xf.dtype))  # (G,E,C,d)
+
+    gates_flat = (gate_vals.reshape(G, g * top_k)
+                  * keep.astype(gate_vals.dtype)).astype(xf.dtype)
+    comb = (pair * gates_flat[..., None, None]
+            ).reshape(G, g, top_k, E, C).sum(axis=2)               # (G,g,E,C)
+    out = jnp.einsum("Gnec,Gecd->Gnd", comb, expert_out).reshape(B, S, d)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(jax.nn.one_hot(
+        gate_idx[..., 0].reshape(-1), E, dtype=jnp.float32), axis=0)
+    mean_probs = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,90 @@
+"""Model registry: one uniform interface over the six architecture families.
+
+    api = build_model(cfg)
+    params = api.init(key)
+    loss   = api.loss(params, batch)            # train shapes
+    logits, cache = api.prefill(params, batch, cache_len=...)
+    logits, cache = api.decode_step(params, cache, token)
+
+Batch layouts by family (all int32 tokens):
+    dense/moe/ssm/hybrid: {'tokens': (B, S+1)}
+    vlm:   {'tokens': (B, S_txt+1), 'patches': (B, n_patches, 1024)}
+    audio: {'tokens': (B, S+1), 'audio_embeds': (B, n_audio_ctx, d_model)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, rwkv6, transformer, vlm, whisper
+from repro.models import attention
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[..., jax.Array]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(key, cfg),
+            loss=lambda p, b, remat="none": transformer.loss_fn(
+                p, b, cfg, remat=remat),
+            prefill=lambda p, b, cache_len=None: transformer.prefill(
+                p, b["tokens"], cfg, cache_len=cache_len),
+            decode_step=lambda p, c, t: transformer.decode_step(p, c, t, cfg),
+        )
+    if fam == "vlm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: vlm.init_params(key, cfg),
+            loss=lambda p, b, remat="none": vlm.loss_fn(p, b, cfg,
+                                                        remat=remat),
+            prefill=lambda p, b, cache_len=None: vlm.prefill(
+                p, b["tokens"], b["patches"], cfg, cache_len=cache_len),
+            decode_step=lambda p, c, t: vlm.decode_step(p, c, t, cfg),
+        )
+    if fam == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: whisper.init_params(key, cfg),
+            loss=lambda p, b, remat="none": whisper.loss_fn(p, b, cfg,
+                                                            remat=remat),
+            prefill=lambda p, b, cache_len=None: whisper.prefill(
+                p, b["tokens"], b["audio_embeds"], cfg, cache_len=cache_len),
+            decode_step=lambda p, c, t: whisper.decode_step(p, c, t, cfg),
+        )
+    if fam == "ssm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: rwkv6.init_params(key, cfg),
+            loss=lambda p, b, remat="none": rwkv6.loss_fn(p, b, cfg,
+                                                          remat=remat),
+            prefill=lambda p, b, cache_len=None: rwkv6.prefill(
+                p, b["tokens"], cfg),
+            decode_step=lambda p, c, t: rwkv6.decode_step(p, c, t, cfg),
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: hybrid.init_params(key, cfg),
+            loss=lambda p, b, remat="none": hybrid.loss_fn(p, b, cfg,
+                                                           remat=remat),
+            prefill=lambda p, b, cache_len=None: hybrid.prefill(
+                p, b["tokens"], cfg, cache_len=cache_len),
+            decode_step=lambda p, c, t: hybrid.decode_step(p, c, t, cfg),
+        )
+    raise KeyError(f"unknown family {fam!r}")

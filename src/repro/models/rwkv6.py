@@ -1,0 +1,255 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay. Assigned arch: rwkv6-3b (32L, d_model=2560, d_ff=8960,
+vocab=65536).
+
+Structure per layer (faithful to the paper, with the low-rank 'token-shift
+lerp' simplified to static mix coefficients + the low-rank *decay* kept
+data-dependent, which is RWKV6's defining feature):
+
+  time-mix:  r,k,v,g,w projections of lerp(x, x_{t-1}); decay
+             w_t = exp(-exp(w0 + tanh(x_w A) B)) in (0,1)^d;
+             WKV state S in R^{H x D x D}:
+                 y_t = r_t . (S + (u*k_t) (x) v_t)
+                 S  <- diag(w_t) S + k_t (x) v_t
+             y -> per-head groupnorm -> * silu(g) -> W_o
+  channel-mix: k = relu(lerp @ W_k)^2 ; out = sigmoid(lerp @ W_r) * (k W_v)
+
+The sequential scan is O(S) — this arch runs `long_500k` natively (state is
+O(1) in context length). The time scan is the perf hot spot; a chunked
+Pallas kernel lives in repro.kernels.rwkv_scan (`wkv_impl='pallas'`).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+PyTree = Any
+
+
+# ------------------------------- params -------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    rank = cfg.rwkv_decay_rank
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        "mix": 0.5 * jnp.ones((5, d), dt),          # r, k, v, w, g lerps
+        "w_r": common.dense_init(ks[0], d, d, dt),
+        "w_k": common.dense_init(ks[1], d, d, dt),
+        "w_v": common.dense_init(ks[2], d, d, dt),
+        "w_g": common.dense_init(ks[3], d, d, dt),
+        "w_o": common.dense_init(ks[4], d, d, dt),
+        "w0": jnp.full((d,), -5.0, dt),             # base decay (slow)
+        "w_A": common.dense_init(ks[5], d, rank, dt, scale=0.01),
+        "w_B": common.dense_init(ks[6], rank, d, dt, scale=0.01),
+        "u": (jax.random.normal(ks[7], (H, hs), jnp.float32) * 0.1
+              ).astype(dt),                          # per-head bonus
+        "gn": jnp.ones((d,), dt), "gn_b": jnp.zeros((d,), dt),
+        "cm_mix": 0.5 * jnp.ones((2, d), dt),        # channel-mix lerps (k, r)
+        "cm_k": common.dense_init(ks[8], d, cfg.d_ff, dt),
+        "cm_v": common.dense_init(ks[9], cfg.d_ff, d, dt),
+        "cm_r": common.dense_init(ks[10], d, d, dt),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(
+        jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "layers": layers,
+        "ln_out": jnp.ones((cfg.d_model,), dt),
+        "ln_out_b": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": common.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+# ------------------------------ primitives ----------------------------------
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """x: (B, S, d) -> previous-token features; prev (B, d) seeds t=0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype),
+                            x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xp, mu):
+    return x + mu.astype(x.dtype) * (xp - x)
+
+
+def _decay(layer: PyTree, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay w_t in (0,1): exp(-exp(w0 + tanh(x A) B))."""
+    low = jnp.tanh(xw.astype(jnp.float32) @ layer["w_A"].astype(jnp.float32))
+    logw = layer["w0"].astype(jnp.float32) \
+        + low @ layer["w_B"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential WKV recurrence (the jnp reference path).
+
+    r,k,v,w: (B, S, H, D); u: (H, D); state: (B, H, D, D) [key x value].
+    Returns (y (B,S,H,D), final_state). f32 accumulation.
+    """
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp          # (B, H, D)
+        kv = k_t[..., :, None] * v_t[..., None, :]           # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), inputs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _group_norm(y: jax.Array, w, b, H: int, eps: float = 64e-5) -> jax.Array:
+    """Per-head LayerNorm over the head dim. y: (B, S, H*D)."""
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, d) * w.astype(jnp.float32)
+            + b.astype(jnp.float32))
+
+
+# ------------------------------- blocks -------------------------------------
+
+
+def time_mix(layer: PyTree, x: jax.Array, cfg: ModelConfig,
+             prev_x: Optional[jax.Array], state: jax.Array,
+             wkv_impl: str = "xla") -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, last_x, new_state). x: (B, S, d) post-ln."""
+    B, S, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    dt = x.dtype
+    xp = _token_shift(x, prev_x)
+    mix = layer["mix"]
+    xr, xk, xv, xw, xg = (_lerp(x, xp, mix[i]) for i in range(5))
+    r = (xr @ layer["w_r"].astype(dt)).reshape(B, S, H, hs)
+    k = (xk @ layer["w_k"].astype(dt)).reshape(B, S, H, hs)
+    v = (xv @ layer["w_v"].astype(dt)).reshape(B, S, H, hs)
+    g = jax.nn.silu((xg @ layer["w_g"].astype(dt)).astype(jnp.float32))
+    w = _decay(layer, xw).reshape(B, S, H, hs)
+    if wkv_impl == "pallas":
+        from repro.kernels import ops as kops
+        y, new_state = kops.rwkv_scan(r, k, v, w, layer["u"], state)
+    else:
+        y, new_state = wkv_scan(r, k, v, w, layer["u"], state)
+    y = _group_norm(y.reshape(B, S, d), layer["gn"], layer["gn_b"], H)
+    out = (y * g).astype(dt) @ layer["w_o"].astype(dt)
+    return out, x[:, -1, :], new_state.astype(state.dtype)
+
+
+def channel_mix(layer: PyTree, x: jax.Array,
+                prev_x: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    dt = x.dtype
+    xp = _token_shift(x, prev_x)
+    xk = _lerp(x, xp, layer["cm_mix"][0])
+    xr = _lerp(x, xp, layer["cm_mix"][1])
+    k = jnp.square(jax.nn.relu(xk @ layer["cm_k"].astype(dt)))
+    out = jax.nn.sigmoid((xr @ layer["cm_r"].astype(dt)
+                          ).astype(jnp.float32)).astype(dt) \
+        * (k @ layer["cm_v"].astype(dt))
+    return out, x[:, -1, :]
+
+
+def _layer(layer: PyTree, h: jax.Array, cfg: ModelConfig,
+           tm_prev, cm_prev, state, wkv_impl="xla"):
+    hn = common.layer_norm(h, layer["ln1"], layer["ln1_b"], cfg.norm_eps)
+    out, tm_x, state = time_mix(layer, hn, cfg, tm_prev, state, wkv_impl)
+    h = h + out
+    hn = common.layer_norm(h, layer["ln2"], layer["ln2_b"], cfg.norm_eps)
+    out, cm_x = channel_mix(layer, hn, cm_prev)
+    return h + out, tm_x, cm_x, state
+
+
+# ----------------------------- full forward ---------------------------------
+
+
+class RWKVCache(NamedTuple):
+    tm_x: jax.Array    # (L, B, d)   last token-shift input, time-mix
+    cm_x: jax.Array    # (L, B, d)   last token-shift input, channel-mix
+    wkv: jax.Array     # (L, B, H, D, D) WKV state
+    index: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int,
+               dtype=None) -> RWKVCache:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_size
+    hs = cfg.rwkv_head_size
+    L = cfg.n_layers
+    dtype = dtype or cfg.compute_dtype
+    return RWKVCache(
+        jnp.zeros((L, batch, d), dtype), jnp.zeros((L, batch, d), dtype),
+        jnp.zeros((L, batch, H, hs, hs), jnp.float32),
+        jnp.zeros((), jnp.int32))
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+            cache: Optional[RWKVCache] = None, remat: str = "none",
+            wkv_impl: str = "xla"
+            ) -> Tuple[jax.Array, RWKVCache]:
+    """Full-sequence forward (train / prefill). Returns (logits, cache)."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cache is None:
+        cache = init_cache(cfg, B)
+
+    def body(carry, xs):
+        h = carry
+        layer, tm_p, cm_p, st = xs
+        h, tm_x, cm_x, st = _layer(layer, h, cfg, tm_p, cm_p, st, wkv_impl)
+        return h, (tm_x, cm_x, st)
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, (tm, cm, wkv) = jax.lax.scan(
+        body, h, (params["layers"], cache.tm_x, cache.cm_x, cache.wkv))
+    h = common.layer_norm(h, params["ln_out"], params["ln_out_b"],
+                          cfg.norm_eps)
+    logits = h @ params["lm_head"].astype(h.dtype)
+    new_cache = RWKVCache(tm, cm, wkv, cache.index + S)
+    return logits, new_cache
+
+
+def loss_fn(params: PyTree, batch: PyTree, cfg: ModelConfig, *,
+            remat: str = "none") -> jax.Array:
+    tokens = batch["tokens"]
+    logits, _ = forward(params, tokens[:, :-1], cfg, remat=remat)
+    return common.cross_entropy_loss(logits, tokens[:, 1:],
+                                     batch.get("mask"))
+
+
+def prefill(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            **kw) -> Tuple[jax.Array, RWKVCache]:
+    logits, cache = forward(params, tokens, cfg)
+    return logits[:, -1:, :], cache
+
+
+def decode_step(params: PyTree, cache: RWKVCache, token: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, RWKVCache]:
+    logits, cache = forward(params, token[:, None], cfg, cache=cache)
+    return logits[:, 0, :], cache

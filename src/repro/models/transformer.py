@@ -1,0 +1,278 @@
+"""Unified decoder-only transformer LM (dense + MoE families).
+
+Layers are *stacked*: every per-layer parameter leaf carries a leading
+``n_layers`` dim and the forward pass is a single ``lax.scan`` over it —
+HLO size and compile time stay O(1) in depth (essential for the 64-81 layer
+assigned configs), and remat policies wrap the scan body.
+
+Three entry points per the serving/training split:
+  forward(params, tokens, cfg, extra_embeds=None)  -> logits (train shapes)
+  prefill(params, tokens, cfg, ...)                -> (logits, KVCache)
+  decode_step(params, cache, token, cfg)           -> (logits, KVCache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp, moe
+
+PyTree = Any
+
+
+# ------------------------------- params -------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig) -> PyTree:
+    k_attn, k_ffn = jax.random.split(key)
+    dt = cfg.param_dtype
+    p = {
+        "attn": attention.init_attention(
+            k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dt, cfg.qkv_bias),
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.norm_kind == "layer":
+        p["norm1_b"] = jnp.zeros((cfg.d_model,), dt)
+        p["norm2_b"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.family == "moe" or (cfg.n_experts and cfg.experts_per_token):
+        p["moe"] = moe.init_moe(k_ffn, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                dt)
+    elif cfg.mlp_kind == "gelu":
+        p["mlp"] = mlp.init_gelu_mlp(k_ffn, cfg.d_model, cfg.d_ff, dt)
+    else:
+        p["mlp"] = mlp.init_swiglu(k_ffn, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.norm_kind == "layer":
+        p["final_norm_b"] = jnp.zeros((cfg.d_model,), dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                         dt)
+    return p
+
+
+# ------------------------------- forward ------------------------------------
+
+
+def _norm(x, w, b, kind, eps):
+    if kind == "layer":
+        return common.layer_norm(x, w, b, eps)
+    return common.rms_norm(x, w, eps)
+
+
+def _layer_forward(layer: PyTree, h: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (h, aux_loss)."""
+    hn = _norm(h, layer["norm1"], layer.get("norm1_b"), cfg.norm_kind,
+               cfg.norm_eps)
+    h = h + attention.attention_forward(
+        layer["attn"], hn, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        causal=True, window=cfg.sliding_window, positions=positions)
+    hn = _norm(h, layer["norm2"], layer.get("norm2_b"), cfg.norm_kind,
+               cfg.norm_eps)
+    if "moe" in layer:
+        ffn_out, aux = moe.moe_forward(
+            layer["moe"], hn, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            group_size=cfg.moe_group_size)
+    elif cfg.mlp_kind == "gelu":
+        ffn_out, aux = mlp.gelu_mlp_forward(layer["mlp"], hn), 0.0
+    else:
+        ffn_out, aux = mlp.swiglu_forward(layer["mlp"], hn), 0.0
+    return h + ffn_out, jnp.asarray(aux, jnp.float32)
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # 'full'
+
+
+def backbone(params: PyTree, h: jax.Array, cfg: ModelConfig,
+             positions: jax.Array, remat: str = "none") -> Tuple[jax.Array,
+                                                                 jax.Array]:
+    """Embed-space in, embed-space out. Returns (h, total_aux)."""
+
+    def body(carry, layer):
+        h = carry
+        h, aux = _layer_forward(layer, h, cfg, positions)
+        return h, aux
+
+    body = _remat_wrap(body, remat)
+    h, auxes = jax.lax.scan(body, h, params["layers"])
+    return h, jnp.sum(auxes)
+
+
+def embed_tokens(params: PyTree, tokens: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    return params["embed"][tokens].astype(cfg.compute_dtype)
+
+
+def unembed(params: PyTree, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = _norm(h, params["final_norm"], params.get("final_norm_b"),
+              cfg.norm_kind, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T.astype(h.dtype)
+    return h @ params["lm_head"].astype(h.dtype)
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+            extra_embeds: Optional[jax.Array] = None,
+            remat: str = "none") -> Tuple[jax.Array, jax.Array]:
+    """Training forward. tokens: (B, S) int32. extra_embeds (VLM stub):
+    (B, P, d) prepended before the token embeddings. Returns
+    (logits (B, S', V), aux_loss) where S' includes prepended positions."""
+    h = embed_tokens(params, tokens, cfg)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    h, aux = backbone(params, h, cfg, positions, remat)
+    return unembed(params, h, cfg), aux
+
+
+def loss_fn(params: PyTree, batch: PyTree, cfg: ModelConfig, *,
+            remat: str = "none") -> jax.Array:
+    """batch: {'tokens': (B, S+1)} (+ optional 'extra_embeds', 'mask')."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(params, inputs, cfg,
+                          extra_embeds=batch.get("extra_embeds"),
+                          remat=remat)
+    if batch.get("extra_embeds") is not None:
+        logits = logits[:, batch["extra_embeds"].shape[1]:]
+    ce = common.cross_entropy_loss(logits, labels, batch.get("mask"))
+    return ce + cfg.router_aux_weight * aux
+
+
+# ----------------------------- prefill/decode -------------------------------
+
+
+def _layer_prefill(layer: PyTree, h: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, cache_len: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Like _layer_forward but also emits this layer's rope'd K/V padded to
+    cache_len (pad at the tail; slot i holds absolute position i)."""
+    B, S, _ = h.shape
+    hn = _norm(h, layer["norm1"], layer.get("norm1_b"), cfg.norm_kind,
+               cfg.norm_eps)
+    q, k, v = attention._project_qkv(
+        layer["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+    pos_b = jnp.broadcast_to(positions, (B, S))
+    q = common.apply_rope(q, pos_b, cfg.rope_theta)
+    k = common.apply_rope(k, pos_b, cfg.rope_theta)
+    attn_out = attention.sdpa(q, k, v, causal=True,
+                              window=cfg.sliding_window)
+    attn_out = attn_out @ layer["attn"]["wo"].astype(attn_out.dtype)
+    h = h + attn_out
+    hn = _norm(h, layer["norm2"], layer.get("norm2_b"), cfg.norm_kind,
+               cfg.norm_eps)
+    if "moe" in layer:
+        ffn_out, _ = moe.moe_forward(layer["moe"], hn,
+                                     top_k=cfg.experts_per_token,
+                                     capacity_factor=cfg.capacity_factor,
+                                     group_size=cfg.moe_group_size)
+    elif cfg.mlp_kind == "gelu":
+        ffn_out = mlp.gelu_mlp_forward(layer["mlp"], hn)
+    else:
+        ffn_out = mlp.swiglu_forward(layer["mlp"], hn)
+    h = h + ffn_out
+
+    pad = cache_len - S
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    elif pad < 0:  # rotating (sliding-window) cache keeps the last slots
+        k = k[:, -cache_len:]
+        v = v[:, -cache_len:]
+    return h, k, v
+
+
+def prefill(params: PyTree, tokens: jax.Array, cfg: ModelConfig, *,
+            cache_len: Optional[int] = None,
+            extra_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, attention.KVCache]:
+    """Run the full prompt, build the KV cache, return last-position logits.
+
+    Sliding-window archs get a rotating cache of size ``sliding_window``;
+    note the rotating layout (slot = pos % window) matches decode_step.
+    """
+    h = embed_tokens(params, tokens, cfg)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    if cache_len is None:
+        cache_len = cfg.sliding_window if cfg.sliding_window else S
+    positions = jnp.arange(S)
+
+    def body(carry, layer):
+        h = carry
+        h, k, v = _layer_prefill(layer, h, cfg, positions, cache_len)
+        return h, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+    logits = unembed(params, h[:, -1:, :], cfg)
+    if cfg.sliding_window and S > cfg.sliding_window:
+        # rotate so slot layout matches decode's (pos % window) convention
+        shift = S % cache_len
+        ks = jnp.roll(ks, shift, axis=2)
+        vs = jnp.roll(vs, shift, axis=2)
+    cache = attention.KVCache(ks, vs, jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: PyTree, cache: attention.KVCache, token: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, attention.KVCache]:
+    """One-token decode. token: (B,) int32; returns (logits (B, V), cache)."""
+    h = embed_tokens(params, token[:, None], cfg)
+    rotating = bool(cfg.sliding_window)
+    index = cache.index
+
+    def body(carry, xs):
+        h = carry
+        layer, lk, lv = xs
+        hn = _norm(h, layer["norm1"], layer.get("norm1_b"), cfg.norm_kind,
+                   cfg.norm_eps)
+        attn_out, lk, lv = attention.decode_attention(
+            layer["attn"], hn, lk, lv, index, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            rotating=rotating)
+        h = h + attn_out
+        hn = _norm(h, layer["norm2"], layer.get("norm2_b"), cfg.norm_kind,
+                   cfg.norm_eps)
+        if "moe" in layer:
+            ffn_out, _ = moe.moe_forward(layer["moe"], hn,
+                                         top_k=cfg.experts_per_token,
+                                         capacity_factor=cfg.capacity_factor,
+                                         group_size=cfg.moe_group_size)
+        elif cfg.mlp_kind == "gelu":
+            ffn_out = mlp.gelu_mlp_forward(layer["mlp"], hn)
+        else:
+            ffn_out = mlp.swiglu_forward(layer["mlp"], hn)
+        return h + ffn_out, (lk, lv)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache.k, cache.v))
+    logits = unembed(params, h, cfg)[:, 0, :]
+    return logits, attention.KVCache(ks, vs, index + 1)

@@ -1,0 +1,68 @@
+"""Phi-3-vision backbone (hf:microsoft/Phi-3-vision-128k-instruct).
+
+Early-fusion VLM: the CLIP ViT-L/14 image encoder is a STUB per the brief —
+``input_specs`` provides (B, n_patches=576, 1024) patch features. The real
+pieces implemented here are the projector (1024 -> d_model) and the
+phi3-mini language backbone (32L dense GQA transformer) consuming
+[projected image tokens ; text tokens] with full causal attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, transformer
+
+PyTree = Any
+
+CLIP_DIM = 1024
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    k_lm, k_proj = jax.random.split(key)
+    p = transformer.init_params(k_lm, cfg)
+    p["projector"] = common.dense_init(k_proj, CLIP_DIM, cfg.d_model,
+                                       cfg.param_dtype)
+    return p
+
+
+def project_patches(params: PyTree, patches: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """(B, P, 1024) stub CLIP features -> (B, P, d_model)."""
+    return patches.astype(cfg.compute_dtype) @ params["projector"].astype(
+        cfg.compute_dtype)
+
+
+def forward(params: PyTree, tokens: jax.Array, patches: jax.Array,
+            cfg: ModelConfig, *, remat: str = "none"
+            ) -> Tuple[jax.Array, jax.Array]:
+    embeds = project_patches(params, patches, cfg)
+    return transformer.forward(params, tokens, cfg, extra_embeds=embeds,
+                               remat=remat)
+
+
+def loss_fn(params: PyTree, batch: PyTree, cfg: ModelConfig, *,
+            remat: str = "none") -> jax.Array:
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens[:, :-1], batch["patches"], cfg,
+                          remat=remat)
+    n_img = batch["patches"].shape[1]
+    logits = logits[:, n_img:]
+    return common.cross_entropy_loss(logits, tokens[:, 1:],
+                                     batch.get("mask"))
+
+
+def prefill(params: PyTree, tokens: jax.Array, patches: jax.Array,
+            cfg: ModelConfig, *, cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, attention.KVCache]:
+    embeds = project_patches(params, patches, cfg)
+    return transformer.prefill(params, tokens, cfg, cache_len=cache_len,
+                               extra_embeds=embeds)
+
+
+def decode_step(params: PyTree, cache: attention.KVCache, token: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, attention.KVCache]:
+    return transformer.decode_step(params, cache, token, cfg)

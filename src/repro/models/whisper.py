@@ -1,0 +1,233 @@
+"""Whisper-large-v3 backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the brief, the mel-spectrogram + conv feature extractor frontend is a
+STUB: ``input_specs`` supplies precomputed frame embeddings
+(B, n_audio_ctx=1500, d_model) and this module implements the real encoder
+transformer over them plus the causal decoder with cross-attention.
+
+Deviations (documented): learned decoder positions are allocated to
+``max_text_positions`` (33024) so the assigned train_4k AND prefill_32k
+shapes fit (the real model caps at 448); long_500k is skipped for this
+arch entirely (see DESIGN.md §skips).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp
+
+PyTree = Any
+
+MAX_TEXT_POSITIONS = 33024
+
+
+def _init_block(key, cfg: ModelConfig, cross: bool) -> PyTree:
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    n = 3 if cross else 2
+    ks = jax.random.split(key, n + 1)
+    p = {
+        "self_attn": attention.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            qkv_bias=True),
+        "mlp": mlp.init_gelu_mlp(ks[1], d, cfg.d_ff, dt),
+        "ln1": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+    }
+    if cross:
+        p["cross_attn"] = attention.init_attention(
+            ks[2], d, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            qkv_bias=True)
+        p["ln_x"] = jnp.ones((d,), dt)
+        p["ln_x_b"] = jnp.zeros((d,), dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    k_enc, k_dec, k_emb, k_pos = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    enc = jax.vmap(lambda k: _init_block(k, cfg, cross=False))(
+        jax.random.split(k_enc, cfg.n_encoder_layers))
+    dec = jax.vmap(lambda k: _init_block(k, cfg, cross=True))(
+        jax.random.split(k_dec, cfg.n_layers))
+    return {
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "embed": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+        "dec_pos": (jax.random.normal(k_pos, (MAX_TEXT_POSITIONS,
+                                               cfg.d_model), jnp.float32)
+                    * 0.01).astype(dt),
+        "enc_ln": jnp.ones((cfg.d_model,), dt),
+        "enc_ln_b": jnp.zeros((cfg.d_model,), dt),
+        "dec_ln": jnp.ones((cfg.d_model,), dt),
+        "dec_ln_b": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def encode(params: PyTree, audio_embeds: jax.Array,
+           cfg: ModelConfig) -> jax.Array:
+    """audio_embeds: (B, T, d) stubbed conv-frontend output."""
+    h = audio_embeds.astype(cfg.compute_dtype)
+    T = h.shape[1]
+    h = h + common.sinusoidal_positions(T, cfg.d_model).astype(h.dtype)
+
+    def body(carry, layer):
+        h = carry
+        hn = common.layer_norm(h, layer["ln1"], layer["ln1_b"], cfg.norm_eps)
+        h = h + attention.attention_forward(
+            layer["self_attn"], hn, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta, causal=False, use_rope=False)
+        hn = common.layer_norm(h, layer["ln2"], layer["ln2_b"], cfg.norm_eps)
+        return h + mlp.gelu_mlp_forward(layer["mlp"], hn), ()
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return common.layer_norm(h, params["enc_ln"], params["enc_ln_b"],
+                             cfg.norm_eps)
+
+
+def _decoder_block(layer: PyTree, h: jax.Array, enc_out: jax.Array,
+                   cfg: ModelConfig, positions) -> jax.Array:
+    hn = common.layer_norm(h, layer["ln1"], layer["ln1_b"], cfg.norm_eps)
+    h = h + attention.attention_forward(
+        layer["self_attn"], hn, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta, causal=True, use_rope=False,
+        positions=positions)
+    hn = common.layer_norm(h, layer["ln_x"], layer["ln_x_b"], cfg.norm_eps)
+    h = h + attention.cross_attention_forward(
+        layer["cross_attn"], hn, enc_out, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim)
+    hn = common.layer_norm(h, layer["ln2"], layer["ln2_b"], cfg.norm_eps)
+    return h + mlp.gelu_mlp_forward(layer["mlp"], hn)
+
+
+def forward(params: PyTree, tokens: jax.Array, audio_embeds: jax.Array,
+            cfg: ModelConfig, *, remat: str = "none") -> jax.Array:
+    """Teacher-forced decode over the full text sequence."""
+    enc_out = encode(params, audio_embeds, cfg)
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    h = h + params["dec_pos"][:S][None].astype(h.dtype)
+    positions = jnp.arange(S)
+
+    def body(carry, layer):
+        return _decoder_block(layer, carry, enc_out, cfg, positions), ()
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    h = common.layer_norm(h, params["dec_ln"], params["dec_ln_b"],
+                          cfg.norm_eps)
+    return h @ params["embed"].T.astype(h.dtype)   # tied output head
+
+
+def loss_fn(params: PyTree, batch: PyTree, cfg: ModelConfig, *,
+            remat: str = "none") -> jax.Array:
+    tokens = batch["tokens"]
+    logits = forward(params, tokens[:, :-1], batch["audio_embeds"], cfg,
+                     remat=remat)
+    return common.cross_entropy_loss(logits, tokens[:, 1:],
+                                     batch.get("mask"))
+
+
+# --------------------------- prefill / decode -------------------------------
+
+
+class WhisperCache(NamedTuple):
+    self_k: jax.Array   # (L, B, S_max, n_kv, hd)
+    self_v: jax.Array
+    cross_k: jax.Array  # (L, B, T_audio, n_kv, hd) — precomputed, static
+    cross_v: jax.Array
+    index: jax.Array
+
+
+def prefill(params: PyTree, tokens: jax.Array, audio_embeds: jax.Array,
+            cfg: ModelConfig, *, cache_len: Optional[int] = None
+            ) -> Tuple[jax.Array, WhisperCache]:
+    enc_out = encode(params, audio_embeds, cfg)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    T = enc_out.shape[1]
+    h = params["embed"][tokens].astype(cfg.compute_dtype)
+    h = h + params["dec_pos"][:S][None].astype(h.dtype)
+    positions = jnp.arange(S)
+    hd = cfg.resolved_head_dim
+
+    def body(carry, layer):
+        h = carry
+        hn = common.layer_norm(h, layer["ln1"], layer["ln1_b"], cfg.norm_eps)
+        q, k, v = attention._project_qkv(layer["self_attn"], hn, cfg.n_heads,
+                                         cfg.n_kv_heads, hd)
+        ao = attention.sdpa(q, k, v, causal=True)
+        h = h + ao @ layer["self_attn"]["wo"].astype(ao.dtype)
+        hn = common.layer_norm(h, layer["ln_x"], layer["ln_x_b"],
+                               cfg.norm_eps)
+        h = h + attention.cross_attention_forward(
+            layer["cross_attn"], hn, enc_out, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=hd)
+        # cross K/V are static per request — precompute once for decode
+        ck = (enc_out @ layer["cross_attn"]["wk"].astype(enc_out.dtype)
+              + layer["cross_attn"]["bk"].astype(enc_out.dtype)
+              ).reshape(B, T, cfg.n_kv_heads, hd)
+        cv = (enc_out @ layer["cross_attn"]["wv"].astype(enc_out.dtype)
+              + layer["cross_attn"]["bv"].astype(enc_out.dtype)
+              ).reshape(B, T, cfg.n_kv_heads, hd)
+        hn = common.layer_norm(h, layer["ln2"], layer["ln2_b"], cfg.norm_eps)
+        h = h + mlp.gelu_mlp_forward(layer["mlp"], hn)
+        pad = cache_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, (k, v, ck, cv)
+
+    h, (ks, vs, cks, cvs) = jax.lax.scan(body, h, params["dec_layers"])
+    h = common.layer_norm(h, params["dec_ln"], params["dec_ln_b"],
+                          cfg.norm_eps)
+    logits = h[:, -1:, :] @ params["embed"].T.astype(h.dtype)
+    return logits, WhisperCache(ks, vs, cks, cvs,
+                                jnp.asarray(S, jnp.int32))
+
+
+def decode_step(params: PyTree, cache: WhisperCache, token: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, WhisperCache]:
+    B = token.shape[0]
+    index = cache.index
+    h = params["embed"][token[:, None]].astype(cfg.compute_dtype)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], index, 1, axis=0)[None].astype(h.dtype)
+    hd = cfg.resolved_head_dim
+
+    def body(carry, xs):
+        h = carry
+        layer, lk, lv, ck, cv = xs
+        hn = common.layer_norm(h, layer["ln1"], layer["ln1_b"], cfg.norm_eps)
+        ao, lk, lv = attention.decode_attention(
+            layer["self_attn"], hn, lk, lv, index, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+            rope_theta=cfg.rope_theta, use_rope=False)
+        h = h + ao
+        hn = common.layer_norm(h, layer["ln_x"], layer["ln_x_b"],
+                               cfg.norm_eps)
+        q = (hn @ layer["cross_attn"]["wq"].astype(hn.dtype)
+             + layer["cross_attn"]["bq"].astype(hn.dtype)
+             ).reshape(B, 1, cfg.n_heads, hd)
+        scores = attention._gqa_scores(q, ck)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ao = attention._gqa_out(probs, cv)
+        h = h + ao @ layer["cross_attn"]["wo"].astype(ao.dtype)
+        hn = common.layer_norm(h, layer["ln2"], layer["ln2_b"], cfg.norm_eps)
+        h = h + mlp.gelu_mlp_forward(layer["mlp"], hn)
+        return h, (lk, lv)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache.self_k, cache.self_v,
+                  cache.cross_k, cache.cross_v))
+    h = common.layer_norm(h, params["dec_ln"], params["dec_ln_b"],
+                          cfg.norm_eps)
+    logits = (h @ params["embed"].T.astype(h.dtype))[:, 0, :]
+    return logits, WhisperCache(ks, vs, cache.cross_k, cache.cross_v,
+                                index + 1)

@@ -1,0 +1,3 @@
+from repro.optim import adam, schedules
+
+__all__ = ["adam", "schedules"]

@@ -1,0 +1,35 @@
+"""Reference (centralized) Adam — the oracle the K=1 identity tests pin
+D-Adam against, written independently of repro.core to catch shared bugs.
+Matches the paper's update exactly (no bias correction, sqrt(v)+tau guard).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class RefAdamState(NamedTuple):
+    m: PyTree
+    v: PyTree
+
+
+def init(params: PyTree) -> RefAdamState:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return RefAdamState(z, jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def step(params: PyTree, grads: PyTree, state: RefAdamState, *,
+         eta: float, beta1: float = 0.9, beta2: float = 0.999,
+         tau: float = 1e-6) -> Tuple[PyTree, RefAdamState]:
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: beta1 * m + (1 - beta1) * g, state.m, grads)
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: beta2 * v + (1 - beta2) * g * g, state.v, grads)
+    new_p = jax.tree_util.tree_map(
+        lambda x, m, v: x - eta * m / (jnp.sqrt(v) + tau),
+        params, new_m, new_v)
+    return new_p, RefAdamState(new_m, new_v)

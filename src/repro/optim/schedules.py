@@ -1,0 +1,18 @@
+"""LR schedules (the paper divides eta by 10 at fixed epochs for CIFAR)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def step_decay(base: float, boundaries: Sequence[int], factor: float = 0.1):
+    def schedule(step: int) -> float:
+        lr = base
+        for b in boundaries:
+            if step >= b:
+                lr *= factor
+        return lr
+    return schedule
+
+
+def constant(base: float):
+    return lambda step: base

@@ -1,0 +1,6 @@
+from repro.serve.engine import (cache_spec, effective_config,
+                                greedy_generate, make_prefill_step,
+                                make_serve_step)
+
+__all__ = ["cache_spec", "effective_config", "make_serve_step",
+           "make_prefill_step", "greedy_generate"]

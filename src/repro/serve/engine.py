@@ -1,0 +1,129 @@
+"""Serving engine: prefill / decode steps and cache specs per family.
+
+``cache_spec(cfg, batch, seq_len)`` returns the ShapeDtypeStruct pytree of
+the KV/SSM cache for the dry-run (no allocation); ``make_serve_step``
+returns the jit-able one-token decode function the decode shapes lower.
+
+Long-context rule (DESIGN.md §6): for ``long_500k`` dense archs substitute
+``cfg.long_context_window`` as a rotating sliding window — the cache is
+window-sized and the step cost O(window) (sub-quadratic); SSM/hybrid archs
+decode against their O(1) recurrent state natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import attention, build_model, hybrid, rwkv6, whisper
+
+PyTree = Any
+
+
+def effective_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply the long-context window substitution for long_500k."""
+    if (shape.name == "long_500k" and cfg.long_context_window
+            and cfg.family in ("dense", "moe", "vlm")):
+        return dataclasses.replace(cfg,
+                                   sliding_window=cfg.long_context_window)
+    if (shape.name == "long_500k" and cfg.family == "hybrid"
+            and cfg.long_context_window):
+        return dataclasses.replace(cfg,
+                                   sliding_window=cfg.long_context_window)
+    return cfg
+
+
+def kv_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int,
+               cache_dtype=jnp.bfloat16) -> PyTree:
+    """ShapeDtypeStruct stand-in of the decode-input cache."""
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.family in ("dense", "moe", "vlm"):
+        S = kv_cache_len(cfg, seq_len)
+        kv = jax.ShapeDtypeStruct((L, batch, S, cfg.n_kv_heads, hd),
+                                  cache_dtype)
+        return attention.KVCache(kv, kv, idx)
+    if cfg.family == "ssm":
+        d = cfg.d_model
+        H = d // cfg.rwkv_head_size
+        hs = cfg.rwkv_head_size
+        return rwkv6.RWKVCache(
+            jax.ShapeDtypeStruct((L, batch, d), cfg.compute_dtype),
+            jax.ShapeDtypeStruct((L, batch, d), cfg.compute_dtype),
+            jax.ShapeDtypeStruct((L, batch, H, hs, hs), jnp.float32), idx)
+    if cfg.family == "hybrid":
+        di, N = cfg.d_inner, cfg.ssm_state
+        H = cfg.resolved_ssm_heads
+        P = di // H
+        A = hybrid.n_attn_sites(cfg)
+        S = kv_cache_len(cfg, seq_len)
+        return hybrid.HybridCache(
+            jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, di + 2 * N),
+                                 cfg.compute_dtype),
+            jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((A, batch, S, cfg.n_kv_heads, hd),
+                                 cache_dtype),
+            jax.ShapeDtypeStruct((A, batch, S, cfg.n_kv_heads, hd),
+                                 cache_dtype), idx)
+    if cfg.family == "audio":
+        S = seq_len
+        kv = jax.ShapeDtypeStruct((L, batch, S, cfg.n_kv_heads, hd),
+                                  cache_dtype)
+        xkv = jax.ShapeDtypeStruct((L, batch, cfg.n_audio_ctx,
+                                    cfg.n_kv_heads, hd), cache_dtype)
+        return whisper.WhisperCache(kv, kv, xkv, xkv, idx)
+    raise KeyError(cfg.family)
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, token) -> (logits, cache) — the decode-shape target."""
+    api = build_model(cfg)
+
+    def serve_step(params, cache, token):
+        return api.decode_step(params, cache, token)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int) -> Callable:
+    api = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+# ----------------------------- request serving ------------------------------
+
+
+def greedy_generate(cfg: ModelConfig, params: PyTree, batch: PyTree,
+                    n_new: int, *, cache_len: Optional[int] = None
+                    ) -> jax.Array:
+    """Batched greedy decoding used by the serving example: prefill the
+    prompt, then n_new jit-compiled decode steps."""
+    api = build_model(cfg)
+    prompt = batch["tokens"]
+    B = prompt.shape[0]
+    cache_len = cache_len or (prompt.shape[1] + n_new
+                              + (cfg.n_patches or 0))
+    logits, cache = api.prefill(params, batch, cache_len=cache_len)
+    tok = jnp.argmax(logits[:, -1, :] if logits.ndim == 3 else logits,
+                     axis=-1).astype(jnp.int32)
+    step = jax.jit(api.decode_step)
+    out = [tok]
+    for _ in range(n_new - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,3 @@
+from repro.train.loop import DecentralizedTrainer, TrainLog, stack_params
+
+__all__ = ["DecentralizedTrainer", "TrainLog", "stack_params"]

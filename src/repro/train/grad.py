@@ -1,0 +1,38 @@
+"""Gradient helpers shared by the trainer and the dry-run launcher.
+
+``make_worker_grad(loss, microbatch)`` builds the per-worker gradient
+function: plain ``jax.grad`` for microbatch=1, or a lax.scan of
+gradient-accumulation steps that divides activation memory by the
+microbatch count (EXPERIMENTS.md §Perf iteration 9)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def make_worker_grad(loss: Callable[[PyTree, PyTree], jax.Array],
+                     microbatch: int = 1) -> Callable[[PyTree, PyTree],
+                                                      PyTree]:
+    if microbatch <= 1:
+        return jax.grad(loss)
+
+    def worker_grad(params: PyTree, batch: PyTree) -> PyTree:
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                + x.shape[1:]), batch)
+        zeros = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            g = jax.grad(loss)(params, mb)
+            return jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), acc, g), ()
+
+        acc, _ = jax.lax.scan(body, zeros, micro)
+        return jax.tree_util.tree_map(lambda g: g / microbatch, acc)
+
+    return worker_grad

@@ -1,0 +1,100 @@
+"""Decentralized training loop.
+
+Couples a per-worker loss function to a DecentralizedOptimizer: stacks K
+parameter replicas, vmaps per-worker gradients, jits one step (with the
+in-graph communication-skip cond), tracks loss / consensus / communication
+cost. Works for any model in the registry and for the paper's own DeepFM /
+Wide&Deep / ResNet20 models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DecentralizedOptimizer, make_optimizer
+from repro.core.dadam import consensus_error, mean_params
+
+PyTree = Any
+
+
+def stack_params(params: PyTree, K: int, *, same_init: bool = True,
+                 key: Optional[jax.Array] = None,
+                 init_fn: Optional[Callable] = None) -> PyTree:
+    """Replicate (or independently re-draw) params across the worker dim."""
+    if same_init or init_fn is None:
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (K,) + x.shape).copy(), params)
+    keys = jax.random.split(key, K)
+    per = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+
+
+@dataclasses.dataclass
+class TrainLog:
+    step: List[int] = dataclasses.field(default_factory=list)
+    loss: List[float] = dataclasses.field(default_factory=list)
+    consensus: List[float] = dataclasses.field(default_factory=list)
+    comm_mb: List[float] = dataclasses.field(default_factory=list)
+    wall_s: List[float] = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> Dict[str, list]:
+        return dataclasses.asdict(self)
+
+
+class DecentralizedTrainer:
+    """Stacked-K decentralized trainer.
+
+    loss_fn(params, batch) -> scalar, evaluated per worker via vmap; the
+    batch carries a leading K dim on every leaf.
+    """
+
+    def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
+                 opt: DecentralizedOptimizer):
+        self.loss_fn = loss_fn
+        self.opt = opt
+        self._grad = jax.vmap(jax.value_and_grad(loss_fn))
+
+        def step(state, batch):
+            losses, grads = self._grad(self.opt.params_of(state), batch)
+            return self.opt.step(state, grads), jnp.mean(losses)
+
+        self._step = jax.jit(step)
+
+    def init(self, params: PyTree) -> Any:
+        stacked = stack_params(params, self.opt.K)
+        return self.opt.init(stacked)
+
+    def comm_mb_per_round(self, state) -> float:
+        return self.opt.comm_bytes_per_round(
+            self.opt.params_of(state)) / 1e6
+
+    def fit(self, state, batch_iter: Iterator[PyTree], steps: int, *,
+            log_every: int = 50, log: Optional[TrainLog] = None) -> Tuple[
+                Any, TrainLog]:
+        log = log or TrainLog()
+        comm_rounds = 0
+        mb_per_round = None
+        t0 = time.perf_counter()
+        for t in range(steps):
+            batch = next(batch_iter)
+            state, loss = self._step(state, batch)
+            if (t + 1) % self.opt.cfg.period == 0:
+                comm_rounds += 1
+            if (t + 1) % log_every == 0 or t == steps - 1:
+                if mb_per_round is None:
+                    mb_per_round = self.comm_mb_per_round(state)
+                log.step.append(t + 1)
+                log.loss.append(float(loss))
+                log.consensus.append(
+                    float(consensus_error(self.opt.params_of(state))))
+                log.comm_mb.append(comm_rounds * mb_per_round)
+                log.wall_s.append(time.perf_counter() - t0)
+        return state, log
+
+    def averaged_params(self, state) -> PyTree:
+        return mean_params(self.opt.params_of(state))

@@ -1,0 +1,99 @@
+"""Definition 2 (delta-contraction) property tests via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (identity, make_compressor, quantize,
+                                    randk, sign, topk, tree_dense_bytes,
+                                    tree_wire_bytes)
+
+COMPRESSORS = {
+    "identity": identity(),
+    "sign": sign(),
+    "topk": topk(0.25),
+    "randk": randk(0.25),
+    "quantize": quantize(16),
+}
+
+vecs = st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False, allow_infinity=False,
+                          width=32),
+                min_size=4, max_size=256)
+
+
+@pytest.mark.parametrize("name", ["identity", "sign", "topk", "quantize"])
+@given(data=vecs)
+@settings(max_examples=30, deadline=None)
+def test_delta_contraction(name, data):
+    """||x - Q(x)||^2 <= (1 - delta) ||x||^2 with delta = delta_bound(d).
+    (randk satisfies this only in expectation — tested separately.)"""
+    comp = COMPRESSORS[name]
+    x = jnp.asarray(data, jnp.float32)
+    qx = comp.apply(x)
+    lhs = float(jnp.sum((x - qx) ** 2))
+    delta = comp.delta_bound(x.size)
+    rhs = (1.0 - delta) * float(jnp.sum(x ** 2))
+    assert lhs <= rhs + 1e-4 * max(1.0, float(jnp.sum(x ** 2)))
+
+
+def test_randk_contraction_in_expectation():
+    """E_x ||x - Q(x)||^2 = (1 - k/d) E||x||^2 for isotropic x (the form
+    in which random sparsification is delta-contractive)."""
+    comp = COMPRESSORS["randk"]
+    d = 64
+    xs = jax.random.normal(jax.random.PRNGKey(3), (200, d))
+    errs = jax.vmap(lambda x: jnp.sum((x - comp.apply(x)) ** 2))(xs)
+    norms = jax.vmap(lambda x: jnp.sum(x ** 2))(xs)
+    ratio = float(jnp.mean(errs) / jnp.mean(norms))
+    assert abs(ratio - (1 - comp.delta_bound(d))) < 0.1
+
+
+@pytest.mark.parametrize("name", sorted(COMPRESSORS))
+def test_wire_roundtrip_equals_apply(name):
+    comp = COMPRESSORS[name]
+    x = jax.random.normal(jax.random.PRNGKey(0), (133,))
+    np.testing.assert_allclose(np.asarray(comp.roundtrip(x)),
+                               np.asarray(comp.apply(x)), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_wire_bytes_ordering():
+    """sign < quantize16 ~ sign < topk(1/4) < identity for f32 payloads."""
+    shape, dtype = (4096,), jnp.float32
+    b_id = COMPRESSORS["identity"].wire_bytes(shape, dtype)
+    b_sign = COMPRESSORS["sign"].wire_bytes(shape, dtype)
+    b_topk = COMPRESSORS["topk"].wire_bytes(shape, dtype)
+    assert b_sign < b_topk < b_id
+    assert b_sign <= shape[0] + 4
+    # paper's headline: sign is ~4x smaller than f32 (32x in bits -> 8x
+    # per byte granularity; 1 byte/elem here = 4x vs f32)
+    assert b_id / b_sign >= 3.9
+
+
+def test_sign_scale_is_l1_mean():
+    x = jnp.asarray([1.0, -2.0, 3.0, -4.0])
+    enc = COMPRESSORS["sign"].encode(x)
+    assert abs(float(enc["scale"]) - 2.5) < 1e-6
+    assert enc["bits"].dtype == jnp.int8
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 4.0, 0.0, 0.05, -0.3, 1.0])
+    q = topk(0.25).apply(x)  # k = 2
+    nz = np.nonzero(np.asarray(q))[0]
+    assert set(nz) == {1, 3}
+
+
+def test_tree_wire_accounting():
+    tree = {"a": jnp.zeros((64, 64)), "b": jnp.zeros((128,))}
+    dense = tree_dense_bytes(tree)
+    wire = tree_wire_bytes(COMPRESSORS["sign"], tree)
+    assert dense == (64 * 64 + 128) * 4
+    assert wire == (64 * 64 + 4) + (128 + 4)
+
+
+def test_unknown_compressor_raises():
+    with pytest.raises(KeyError):
+        make_compressor("nope")

@@ -1,0 +1,81 @@
+"""CD-Adam axis variant (pods mode): comm_round_axis under shard_map must
+match the stacked implementation — run in a subprocess with 4 host devices.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.core import cdadam
+    from repro.core.cdadam import CDAdamConfig, CDAdamAxisState
+    from repro.core.compression import sign
+    from repro.core.topology import make_topology
+
+    K, d = 4, 64
+    mesh = jax.make_mesh((4,), ("pod",))
+    topo = make_topology("ring", K)
+    cfg = CDAdamConfig(eta=0.01, period=1, gamma=0.4, tau=1e-3)
+    comp = sign()
+    key = jax.random.PRNGKey(0)
+    x_half = jax.random.normal(key, (K, d))
+    hat_self = jax.random.normal(jax.random.fold_in(key, 1), (K, d)) * 0.3
+    # stacked hat_nbrs convention: hat_nbrs[i][k] = hat_self[(k+s_i) % K]
+    hat_nbrs = tuple(jnp.roll(hat_self, -s, axis=0) for s in topo.offsets)
+
+    # ---- stacked reference --------------------------------------------------
+    from repro.core.cdadam import CDAdamState, _comm_round
+    from repro.core.dadam import AdamMoments
+    mom = AdamMoments(jnp.zeros((K, d)), jnp.zeros((K, d)),
+                      jnp.zeros((), jnp.int32))
+    ref = _comm_round(CDAdamState({"x": x_half}, mom, {"x": hat_self},
+                                  tuple({"x": hn} for hn in hat_nbrs)),
+                      topo, cfg, comp)
+
+    # ---- axis variant under shard_map --------------------------------------
+    def axis_round(xh, hs, hn0, hn1):
+        st = CDAdamAxisState({"x": xh[0]}, None, {"x": hs[0]},
+                             ({"x": hn0[0]}, {"x": hn1[0]}))
+        out = cdadam.comm_round_axis(st, topo, cfg, comp, "pod")
+        return (out.params["x"][None], out.hat_self["x"][None],
+                out.hat_nbrs[0]["x"][None], out.hat_nbrs[1]["x"][None])
+
+    got = shard_map(axis_round, mesh=mesh,
+                    in_specs=(P("pod"), P("pod"), P("pod"), P("pod")),
+                    out_specs=(P("pod"), P("pod"), P("pod"), P("pod")))(
+        x_half, hat_self, hat_nbrs[0], hat_nbrs[1])
+
+    np.testing.assert_allclose(np.asarray(got[0]),
+                               np.asarray(ref.params["x"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[1]),
+                               np.asarray(ref.hat_self["x"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[2]),
+                               np.asarray(ref.hat_nbrs[0]["x"]),
+                               rtol=1e-5, atol=1e-6)
+    print("OK cdadam_axis_matches_stacked")
+""")
+
+
+@pytest.mark.slow
+def test_cdadam_axis_matches_stacked():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-3000:])
+    assert "OK cdadam_axis_matches_stacked" in proc.stdout

@@ -1,0 +1,200 @@
+"""Infrastructure: checkpointing, data pipeline, metrics, train loop,
+config registry, axis-gossip variant."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import get_arch, get_reduced, list_archs
+from repro.core import make_optimizer, make_topology
+from repro.core.dadam import gossip_axis, gossip_roll
+from repro.data import (ctr_batch, image_batch, lm_batch, make_ctr_task)
+from repro.models.deepfm import (deepfm_loss, init_deepfm, init_resnet20,
+                                 resnet20_logits, resnet20_loss,
+                                 init_widedeep, widedeep_loss)
+from repro.train import DecentralizedTrainer
+from repro.train.metrics import accuracy, auc
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestCheckpoint:
+    def test_optimizer_state_roundtrip(self, tmp_path):
+        opt = make_optimizer("cd-adam", K=4, compressor="sign")
+        state = opt.init({"w": jnp.ones((4, 8, 3)),
+                          "b": jnp.zeros((4, 5), jnp.bfloat16)})
+        state = opt.step(state, {"w": jnp.ones((4, 8, 3)) * 0.1,
+                                 "b": jnp.ones((4, 5), jnp.bfloat16)})
+        path = str(tmp_path / "ck.npz")
+        save(path, state, step=3)
+        restored, step = restore(path, state)
+        assert step == 3
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        save(path, {"a": jnp.ones((3,))})
+        with pytest.raises(ValueError):
+            restore(path, {"a": jnp.ones((4,))})
+
+
+class TestData:
+    def test_lm_batch_non_iid(self):
+        b0 = lm_batch(KEY, 64, 32, 1000, worker=0, n_workers=8)
+        b7 = lm_batch(KEY, 64, 32, 1000, worker=7, n_workers=8)
+        assert b0.shape == (64, 33)
+        # worker bands shift the token distribution
+        assert abs(float(jnp.mean(b0)) - float(jnp.mean(b7))) > 20
+
+    def test_ctr_batch_learnable_and_non_iid(self):
+        task = make_ctr_task(0, n_fields=4, features_per_field=16)
+        b0 = ctr_batch(task, KEY, 128, worker=0, n_workers=8)
+        b7 = ctr_batch(task, KEY, 128, worker=7, n_workers=8)
+        assert b0["feat_ids"].shape == (128, 4)
+        assert 0.05 < float(jnp.mean(b0["label"])) < 0.95
+        assert float(jnp.mean(b0["feat_ids"])) < float(
+            jnp.mean(b7["feat_ids"]))
+
+    def test_image_batch_class_skew(self):
+        b = image_batch(KEY, 256, worker=2, n_workers=8, skew=1.0)
+        counts = np.bincount(np.asarray(b["label"]), minlength=10)
+        assert counts.argmax() == 2
+
+
+class TestPaperModels:
+    def test_deepfm_learns(self):
+        task = make_ctr_task(0, n_fields=4, features_per_field=16)
+        params = init_deepfm(KEY, task.n_features, task.n_fields,
+                             hidden=(16,))
+        batch = ctr_batch(task, KEY, 256)
+        l0 = float(deepfm_loss(params, batch))
+        g = jax.grad(deepfm_loss)(params, batch)
+        params2 = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, g)
+        assert float(deepfm_loss(params2, batch)) < l0
+
+    def test_widedeep_forward(self):
+        task = make_ctr_task(1, n_fields=4, features_per_field=16)
+        params = init_widedeep(KEY, task.n_features, task.n_fields,
+                               hidden=(16,))
+        batch = ctr_batch(task, KEY, 32)
+        assert not bool(jnp.isnan(widedeep_loss(params, batch)))
+
+    def test_resnet20_shapes_and_grad(self):
+        params = init_resnet20(KEY, width=8)
+        images = jax.random.normal(KEY, (4, 32, 32, 3))
+        logits = resnet20_logits(params, images)
+        assert logits.shape == (4, 10)
+        g = jax.grad(resnet20_loss)(params, {"images": images,
+                                             "label": jnp.zeros(4, jnp.int32)})
+        assert float(jnp.sum(jnp.abs(g["stem"]))) > 0
+
+
+class TestMetrics:
+    def test_auc_perfect_and_random(self):
+        assert auc(np.array([.9, .8, .2, .1]), np.array([1, 1, 0, 0])) == 1.0
+        assert abs(auc(np.arange(1000) % 7 / 7.0,
+                       (np.arange(1000) % 2)) - 0.5) < 0.06
+
+    def test_accuracy(self):
+        logits = jnp.asarray([[1., 0.], [0., 1.]])
+        assert accuracy(logits, jnp.asarray([0, 1])) == 1.0
+
+
+class TestAxisGossip:
+    def test_axis_matches_roll_under_shard_map(self):
+        """pods-mode gossip (ppermute inside shard_map) == stacked roll."""
+        if jax.device_count() < 2:
+            pytest.skip("needs >=2 devices")
+        import jax.experimental.shard_map as shmap  # noqa
+
+
+class TestConfigs:
+    def test_all_archs_have_source_citations(self):
+        for a in list_archs():
+            assert get_arch(a).source, a
+
+    def test_full_configs_match_brief_dims(self):
+        spec = {
+            "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+            "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+            "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+            "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+            "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+            "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+            "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+            "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+            "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+            "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        }
+        for a, (L, d, H, kv, ff, V) in spec.items():
+            m = get_arch(a).model
+            assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads,
+                    m.d_ff, m.vocab_size) == (L, d, H, kv, ff, V), a
+
+    def test_moe_configs(self):
+        m = get_arch("phi3.5-moe-42b-a6.6b").model
+        assert (m.n_experts, m.experts_per_token) == (16, 2)
+        m = get_arch("llama4-maverick-400b-a17b").model
+        assert (m.n_experts, m.experts_per_token) == (128, 1)
+
+    def test_zamba_ssm_state(self):
+        assert get_arch("zamba2-7b").model.ssm_state == 64
+
+
+class TestTrainerAccounting:
+    def test_comm_mb_monotone_and_loss_logged(self):
+        task = make_ctr_task(0, n_fields=4, features_per_field=8)
+        opt = make_optimizer("d-adam", K=4, eta=1e-3, period=2)
+        trainer = DecentralizedTrainer(lambda p, b: deepfm_loss(p, b), opt)
+        params = init_deepfm(KEY, task.n_features, task.n_fields,
+                             hidden=(8,))
+        state = trainer.init(params)
+
+        def it():
+            t = 0
+            while True:
+                from repro.data import ctr_batch_stacked
+                yield ctr_batch_stacked(task, jax.random.fold_in(KEY, t),
+                                        4, 16)
+                t += 1
+
+        state, log = trainer.fit(state, it(), 8, log_every=2)
+        assert len(log.loss) == 4
+        assert log.comm_mb == sorted(log.comm_mb)
+        assert log.comm_mb[-1] > 0
+
+
+class TestMicrobatchGrad:
+    def test_accumulated_equals_full_batch(self):
+        """make_worker_grad(loss, M) must equal the full-batch gradient
+        when the loss is a mean over the batch (CE losses are)."""
+        from repro.train.grad import make_worker_grad
+        from repro.configs import get_reduced
+        from repro.models import build_model
+
+        cfg = get_reduced("llama3.2-1b").model
+        api = build_model(cfg)
+        params = api.init(KEY)
+        toks = jax.random.randint(KEY, (8, 17), 0, cfg.vocab_size)
+        batch = {"tokens": toks}
+        loss = lambda p, b: api.loss(p, b)
+        g1 = make_worker_grad(loss, 1)(params, batch)
+        g4 = make_worker_grad(loss, 4)(params, batch)
+        for a, b in zip(jax.tree_util.tree_leaves(g1),
+                        jax.tree_util.tree_leaves(g4)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=3e-3)
+
+    def test_microbatch_must_divide(self):
+        from repro.train.grad import make_worker_grad
+        loss = lambda p, b: jnp.mean((b["x"] - p["w"]) ** 2)
+        g = make_worker_grad(loss, 3)
+        with pytest.raises(Exception):
+            g({"w": jnp.zeros(())}, {"x": jnp.ones((8,))})  # 8 % 3 != 0

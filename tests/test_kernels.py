@@ -1,0 +1,159 @@
+"""Pallas kernel sweeps: interpret-mode execution vs ref.py oracles across
+shapes and dtypes (the brief's per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestFusedAdam:
+    @pytest.mark.parametrize("n", [1, 128, 1000, 32768, 32768 + 17])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, n, dtype):
+        p = rnd(KEY, (n,), dtype)
+        g = rnd(jax.random.fold_in(KEY, 1), (n,), dtype)
+        m = rnd(jax.random.fold_in(KEY, 2), (n,), jnp.float32, 0.1)
+        v = jnp.abs(rnd(jax.random.fold_in(KEY, 3), (n,), jnp.float32, 0.1))
+        po, mo, vo = ops.fused_adam(p, g, m, v, eta=1e-3, tau=1e-6)
+        pr, mr, vr = ref.fused_adam_ref(p, g, m, v, eta=1e-3, beta1=0.9,
+                                        beta2=0.999, tau=1e-6)
+        tol = TOL[dtype]
+        np.testing.assert_allclose(np.asarray(po, np.float32),
+                                   np.asarray(pr, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(vo), np.asarray(vr),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_2d_param_and_weight_decay(self):
+        p = rnd(KEY, (37, 53))
+        g = rnd(jax.random.fold_in(KEY, 1), (37, 53))
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        po, _, _ = ops.fused_adam(p, g, m, v, eta=1e-2, weight_decay=0.1)
+        pr, _, _ = ref.fused_adam_ref(p, g, m, v, eta=1e-2, beta1=0.9,
+                                      beta2=0.999, tau=1e-6,
+                                      weight_decay=0.1)
+        np.testing.assert_allclose(np.asarray(po), np.asarray(pr),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestSignCompress:
+    @pytest.mark.parametrize("n", [4, 100, 32768, 40000])
+    def test_sweep(self, n):
+        x = rnd(KEY, (n,))
+        hat = rnd(jax.random.fold_in(KEY, 1), (n,), scale=0.5)
+        q, s, hn = ops.sign_compress(x, hat)
+        qr, sr, hnr = ref.sign_compress_ref(x, hat)
+        assert q.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(float(s), float(sr), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(hn), np.asarray(hnr),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_padding_does_not_pollute_scale(self):
+        """Scale must be mean over the TRUE n, not the padded size."""
+        n = 100  # far from a (256*128) tile boundary
+        x = jnp.ones((n,))
+        hat = jnp.zeros((n,))
+        _, s, _ = ops.sign_compress(x, hat)
+        assert abs(float(s) - 1.0) < 1e-6
+
+    def test_contraction_property_of_kernel_output(self):
+        x = rnd(KEY, (4096,))
+        hat = jnp.zeros((4096,))
+        q, s, hn = ops.sign_compress(x, hat)
+        err = float(jnp.sum((x - hn) ** 2))
+        assert err <= float(jnp.sum(x ** 2))  # delta-contraction vs hat=0
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,Hq,Hk,D,bq,bkv", [
+        (128, 4, 4, 64, 64, 64),     # MHA
+        (128, 4, 2, 64, 64, 32),     # GQA 2:1
+        (256, 8, 1, 64, 128, 128),   # MQA
+        (192, 4, 2, 128, 64, 64),    # 128-lane head dim
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, S, Hq, Hk, D, bq, bkv, dtype):
+        q = rnd(KEY, (2, S, Hq, D), dtype)
+        k = rnd(jax.random.fold_in(KEY, 1), (2, S, Hk, D), dtype)
+        v = rnd(jax.random.fold_in(KEY, 2), (2, S, Hk, D), dtype)
+        out = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_kv=bkv)
+        r = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(r, np.float32), **TOL[dtype])
+
+    @pytest.mark.parametrize("window", [16, 64])
+    def test_sliding_window(self, window):
+        q = rnd(KEY, (1, 128, 2, 32))
+        k = rnd(jax.random.fold_in(KEY, 1), (1, 128, 2, 32))
+        v = rnd(jax.random.fold_in(KEY, 2), (1, 128, 2, 32))
+        out = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  block_q=32, block_kv=32)
+        r = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_non_causal(self):
+        q = rnd(KEY, (1, 64, 2, 32))
+        k = rnd(jax.random.fold_in(KEY, 1), (1, 64, 2, 32))
+        v = rnd(jax.random.fold_in(KEY, 2), (1, 64, 2, 32))
+        out = ops.flash_attention(q, k, v, causal=False, block_q=32,
+                                  block_kv=32)
+        r = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestRWKVScan:
+    @pytest.mark.parametrize("S,H,D,chunk", [
+        (64, 2, 32, 16), (96, 3, 32, 32), (128, 1, 64, 128),
+        (60, 2, 32, 16),  # chunk does not divide -> shrink
+    ])
+    def test_sweep(self, S, H, D, chunk):
+        B = 2
+        ks = [jax.random.fold_in(KEY, i) for i in range(6)]
+        r = rnd(ks[0], (B, S, H, D), scale=0.3)
+        k = rnd(ks[1], (B, S, H, D), scale=0.3)
+        v = rnd(ks[2], (B, S, H, D), scale=0.3)
+        w = jax.nn.sigmoid(rnd(ks[3], (B, S, H, D)))
+        u = rnd(ks[4], (H, D), scale=0.1)
+        s0 = rnd(ks[5], (B, H, D, D), scale=0.1)
+        y, sf = ops.rwkv_scan(r, k, v, w, u, s0, chunk=chunk)
+        yr, sfr = ref.rwkv_scan_ref(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(sfr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_continuity_across_calls(self):
+        """Two chunked calls == one long call (serving decode contract)."""
+        B, S, H, D = 1, 64, 2, 32
+        ks = [jax.random.fold_in(KEY, 10 + i) for i in range(5)]
+        r = rnd(ks[0], (B, S, H, D), scale=0.3)
+        k = rnd(ks[1], (B, S, H, D), scale=0.3)
+        v = rnd(ks[2], (B, S, H, D), scale=0.3)
+        w = jax.nn.sigmoid(rnd(ks[3], (B, S, H, D)))
+        u = rnd(ks[4], (H, D), scale=0.1)
+        s0 = jnp.zeros((B, H, D, D))
+        y_full, s_full = ops.rwkv_scan(r, k, v, w, u, s0, chunk=32)
+        y1, s1 = ops.rwkv_scan(r[:, :32], k[:, :32], v[:, :32], w[:, :32],
+                               u, s0, chunk=32)
+        y2, s2 = ops.rwkv_scan(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:],
+                               u, s1, chunk=32)
+        np.testing.assert_allclose(np.asarray(y_full[:, 32:]),
+                                   np.asarray(y2), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)

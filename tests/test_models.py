@@ -1,0 +1,237 @@
+"""Model substrate: decode-vs-forward consistency per family, attention
+implementations agree, MoE routing invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model, hybrid, rwkv6, transformer, whisper
+from repro.models.attention import flash_attention_xla, sdpa
+from repro.models.moe import moe_forward, init_moe
+
+KEY = jax.random.PRNGKey(0)
+TOKS = jax.random.randint(KEY, (2, 17), 0, 97)
+
+
+def dense_cfg(**kw):
+    base = dict(arch_id="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def max_err(a, b):
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+class TestDense:
+    def test_decode_matches_forward(self):
+        cfg = dense_cfg()
+        api = build_model(cfg)
+        p = api.init(KEY)
+        lf, _ = transformer.forward(p, TOKS, cfg)
+        _, cache = api.prefill(p, {"tokens": TOKS[:, :16]}, cache_len=20)
+        ld, _ = api.decode_step(p, cache, TOKS[:, 16])
+        assert max_err(ld, lf[:, 16, :]) < 1e-4
+
+    def test_sliding_window_decode_matches(self):
+        cfg = dense_cfg(sliding_window=8)
+        api = build_model(cfg)
+        p = api.init(KEY)
+        lf, _ = transformer.forward(p, TOKS, cfg)
+        _, cache = api.prefill(p, {"tokens": TOKS[:, :16]})
+        ld, _ = api.decode_step(p, cache, TOKS[:, 16])
+        assert max_err(ld, lf[:, 16, :]) < 1e-4
+
+    def test_multi_token_decode_chain(self):
+        cfg = dense_cfg()
+        api = build_model(cfg)
+        p = api.init(KEY)
+        toks = jax.random.randint(jax.random.fold_in(KEY, 9), (2, 21), 0, 97)
+        lf, _ = transformer.forward(p, toks, cfg)
+        _, c = api.prefill(p, {"tokens": toks[:, :17]}, cache_len=21)
+        for i in range(17, 21):
+            ld, c = api.decode_step(p, c, toks[:, i])
+            assert max_err(ld, lf[:, i, :]) < 1e-4
+
+    def test_qkv_bias_variant(self):
+        cfg = dense_cfg(qkv_bias=True)
+        api = build_model(cfg)
+        p = api.init(KEY)
+        assert "bq" in jax.tree_util.tree_map(lambda x: x,
+                                              p["layers"]["attn"])
+        loss = api.loss(p, {"tokens": TOKS})
+        assert not bool(jnp.isnan(loss))
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 24),
+                                               (False, 0)])
+    def test_matches_naive(self, causal, window):
+        q = jax.random.normal(KEY, (2, 64, 4, 16))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 64, 2, 16))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 64, 2, 16))
+        ref = sdpa(q, k, v, causal=causal, window=window, impl="naive")
+        out = flash_attention_xla(q, k, v, causal=causal, window=window,
+                                  chunk_q=16, chunk_kv=16)
+        assert max_err(out.reshape(ref.shape), ref) < 1e-5
+
+    def test_grad_matches_naive(self):
+        q = jax.random.normal(KEY, (1, 32, 2, 8))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 32, 2, 8))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 32, 2, 8))
+        g1 = jax.grad(lambda q: jnp.sum(flash_attention_xla(
+            q, k, v, causal=True, chunk_q=8, chunk_kv=8) ** 2))(q)
+        g2 = jax.grad(lambda q: jnp.sum(sdpa(
+            q, k, v, causal=True, impl="naive") ** 2))(q)
+        assert max_err(g1, g2.reshape(g1.shape)) < 1e-4
+
+
+class TestMoE:
+    def test_decode_matches_forward_with_ample_capacity(self):
+        cfg = ModelConfig(arch_id="m", family="moe", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
+                          n_experts=4, experts_per_token=2,
+                          capacity_factor=4.0, moe_group_size=8)
+        api = build_model(cfg)
+        p = api.init(KEY)
+        lf, _ = transformer.forward(p, TOKS, cfg)
+        _, cache = api.prefill(p, {"tokens": TOKS[:, :16]}, cache_len=20)
+        ld, _ = api.decode_step(p, cache, TOKS[:, 16])
+        assert max_err(ld, lf[:, 16, :]) < 1e-3
+
+    def test_router_mass_conservation(self):
+        """With ample capacity, output == weighted sum of expert outputs;
+        a constant-function expert set must reproduce constants."""
+        params = init_moe(KEY, 32, 64, 4, jnp.float32)
+        # zero expert weights => expert output 0 => moe output 0
+        zero = jax.tree_util.tree_map(jnp.zeros_like, params)
+        zero["router"] = params["router"]
+        x = jax.random.normal(KEY, (2, 8, 32))
+        out, aux = moe_forward(zero, x, top_k=2, capacity_factor=4.0,
+                               group_size=8)
+        assert float(jnp.max(jnp.abs(out))) == 0.0
+        assert float(aux) > 0.0
+
+    def test_top1_vs_top2_flops_visible(self):
+        params = init_moe(KEY, 32, 64, 8, jnp.float32)
+        x = jax.random.normal(KEY, (1, 16, 32))
+        o1, _ = moe_forward(params, x, top_k=1, group_size=16)
+        o2, _ = moe_forward(params, x, top_k=2, group_size=16)
+        assert o1.shape == o2.shape == x.shape
+        assert max_err(o1, o2) > 1e-6  # different routing
+
+
+class TestRWKV:
+    CFG = ModelConfig(arch_id="r", family="ssm", n_layers=2, d_model=64,
+                      n_heads=2, n_kv_heads=2, d_ff=224, vocab_size=97,
+                      rwkv_head_size=32, rwkv_decay_rank=8)
+
+    def test_decode_matches_forward(self):
+        api = build_model(self.CFG)
+        p = api.init(KEY)
+        lf, _ = rwkv6.forward(p, TOKS, self.CFG)
+        _, c = api.prefill(p, {"tokens": TOKS[:, :16]})
+        ld, _ = api.decode_step(p, c, TOKS[:, 16])
+        assert max_err(ld, lf[:, 16, :]) < 1e-3
+
+    def test_state_carries_context(self):
+        """Same token, different history => different logits (the SSM state
+        actually carries information)."""
+        api = build_model(self.CFG)
+        p = api.init(KEY)
+        t1 = jax.random.randint(KEY, (1, 8), 0, 97)
+        t2 = jax.random.randint(jax.random.fold_in(KEY, 3), (1, 8), 0, 97)
+        _, c1 = api.prefill(p, {"tokens": t1})
+        _, c2 = api.prefill(p, {"tokens": t2})
+        tok = jnp.asarray([5], jnp.int32)
+        l1, _ = api.decode_step(p, c1, tok)
+        l2, _ = api.decode_step(p, c2, tok)
+        assert max_err(l1, l2) > 1e-4
+
+    def test_decay_in_unit_interval(self):
+        p = rwkv6.init_layer(KEY, self.CFG)
+        x = jax.random.normal(KEY, (2, 8, 64))
+        w = rwkv6._decay(p, x)
+        assert float(jnp.min(w)) > 0.0 and float(jnp.max(w)) < 1.0
+
+
+class TestHybrid:
+    CFG = ModelConfig(arch_id="z", family="hybrid", n_layers=5, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
+                      ssm_state=16, ssm_heads=4, shared_attn_period=2)
+
+    def test_decode_matches_forward(self):
+        api = build_model(self.CFG)
+        p = api.init(KEY)
+        lf, _ = hybrid.forward(p, TOKS, self.CFG)
+        _, c = api.prefill(p, {"tokens": TOKS[:, :16]}, cache_len=20)
+        ld, _ = api.decode_step(p, c, TOKS[:, 16])
+        assert max_err(ld, lf[:, 16, :]) < 1e-3
+
+    def test_shared_block_weight_sharing(self):
+        """All attn sites use the same parameters — perturbing the single
+        shared block changes every insertion point's output."""
+        api = build_model(self.CFG)
+        p = api.init(KEY)
+        assert hybrid.n_attn_sites(self.CFG) == 2
+        l0, _ = hybrid.forward(p, TOKS, self.CFG)
+        p2 = jax.tree_util.tree_map(lambda x: x, p)
+        p2["shared"]["attn"]["wq"] = p2["shared"]["attn"]["wq"] + 0.1
+        l1, _ = hybrid.forward(p2, TOKS, self.CFG)
+        assert max_err(l0, l1) > 1e-5
+
+
+class TestWhisper:
+    CFG = ModelConfig(arch_id="w", family="audio", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
+                      n_encoder_layers=2, n_audio_ctx=10, mlp_kind="gelu",
+                      norm_kind="layer")
+
+    def test_decode_matches_forward(self):
+        api = build_model(self.CFG)
+        p = api.init(KEY)
+        ae = jax.random.normal(KEY, (2, 10, 64))
+        lf = whisper.forward(p, TOKS, ae, self.CFG)
+        _, c = api.prefill(p, {"tokens": TOKS[:, :16], "audio_embeds": ae},
+                           cache_len=20)
+        ld, _ = api.decode_step(p, c, TOKS[:, 16])
+        assert max_err(ld, lf[:, 16, :]) < 1e-3
+
+    def test_audio_conditioning_matters(self):
+        api = build_model(self.CFG)
+        p = api.init(KEY)
+        a1 = jax.random.normal(KEY, (2, 10, 64))
+        a2 = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 10, 64))
+        l1 = whisper.forward(p, TOKS, a1, self.CFG)
+        l2 = whisper.forward(p, TOKS, a2, self.CFG)
+        assert max_err(l1, l2) > 1e-4
+
+
+class TestVLM:
+    def test_loss_and_patch_conditioning(self):
+        cfg = ModelConfig(arch_id="v", family="vlm", n_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
+                          n_patches=4)
+        api = build_model(cfg)
+        p = api.init(KEY)
+        pa = jax.random.normal(KEY, (2, 4, 1024))
+        pb = jax.random.normal(jax.random.fold_in(KEY, 11), (2, 4, 1024))
+        la = api.loss(p, {"tokens": TOKS, "patches": pa})
+        lb = api.loss(p, {"tokens": TOKS, "patches": pb})
+        assert not bool(jnp.isnan(la))
+        assert abs(float(la) - float(lb)) > 1e-6
+
+
+def test_remat_policies_equal_loss():
+    cfg = dense_cfg()
+    api = build_model(cfg)
+    p = api.init(KEY)
+    batch = {"tokens": TOKS}
+    l0 = float(api.loss(p, batch, remat="none"))
+    l1 = float(api.loss(p, batch, remat="dots"))
+    l2 = float(api.loss(p, batch, remat="full"))
+    assert abs(l0 - l1) < 1e-5 and abs(l0 - l2) < 1e-5

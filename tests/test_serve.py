@@ -1,0 +1,99 @@
+"""Serving engine: cache_spec consistency with real prefill outputs,
+greedy generation, long-context window substitution."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced, list_archs
+from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.models import build_model
+from repro.serve import (cache_spec, effective_config, greedy_generate)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_prompt(cfg, batch=2, seq=12):
+    b = {"tokens": jax.random.randint(KEY, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(KEY, (batch, cfg.n_patches, 1024))
+    if cfg.family == "audio":
+        b["audio_embeds"] = jax.random.normal(
+            KEY, (batch, cfg.n_audio_ctx, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+def test_cache_spec_matches_actual_prefill(arch_id):
+    """cache_spec's ShapeDtypeStructs must exactly match the cache a real
+    prefill produces — the dry-run depends on this contract."""
+    cfg = get_reduced(arch_id).model
+    api = build_model(cfg)
+    B, S = 2, 16
+    extra = cfg.n_patches if cfg.family == "vlm" else 0
+    spec = cache_spec(cfg, B, S + extra)
+
+    from repro.serve.engine import kv_cache_len
+    cache_len = kv_cache_len(cfg, S + extra)
+    params_sds = jax.eval_shape(lambda: api.init(KEY))
+    batch = make_prompt(cfg, B, S)
+    batch_sds = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+    _, cache_sds = jax.eval_shape(
+        lambda p, b: api.prefill(p, b, cache_len=cache_len),
+        params_sds, batch_sds)
+    got = jax.tree_util.tree_map(lambda l: (l.shape, str(l.dtype)),
+                                 cache_sds)
+    want = jax.tree_util.tree_map(lambda l: (l.shape, str(l.dtype)), spec)
+    assert jax.tree_util.tree_structure(got) == \
+        jax.tree_util.tree_structure(want), arch_id
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        assert g == w, f"{arch_id}: cache leaf {g} != spec {w}"
+
+
+def test_effective_config_substitutes_window():
+    cfg = get_reduced("llama3.2-1b").model
+    shape = INPUT_SHAPES["long_500k"]
+    eff = effective_config(cfg, shape)
+    assert eff.sliding_window == cfg.long_context_window > 0
+    # other shapes untouched
+    eff2 = effective_config(cfg, INPUT_SHAPES["decode_32k"])
+    assert eff2.sliding_window == cfg.sliding_window
+
+
+def test_ssm_cache_size_independent_of_context():
+    cfg = get_reduced("rwkv6-3b").model
+    s1 = cache_spec(cfg, 1, 32768)
+    s2 = cache_spec(cfg, 1, 524288)
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        assert a.shape == b.shape  # O(1) state
+
+
+def test_windowed_cache_is_window_sized():
+    cfg = dataclasses.replace(get_reduced("llama3.2-1b").model,
+                              sliding_window=8)
+    spec = cache_spec(cfg, 1, 524288)
+    assert spec.k.shape[2] == 8
+
+
+def test_greedy_generate():
+    cfg = get_reduced("llama3.2-1b").model
+    api = build_model(cfg)
+    params = api.init(KEY)
+    out = greedy_generate(cfg, params, make_prompt(cfg), n_new=5)
+    assert out.shape == (2, 5)
+    assert out.dtype == jnp.int32
+    assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
+
+
+def test_greedy_generate_deterministic():
+    cfg = get_reduced("yi-6b").model
+    api = build_model(cfg)
+    params = api.init(KEY)
+    prompt = make_prompt(cfg)
+    o1 = greedy_generate(cfg, params, prompt, n_new=4)
+    o2 = greedy_generate(cfg, params, prompt, n_new=4)
+    assert bool(jnp.all(o1 == o2))

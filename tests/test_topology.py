@@ -1,0 +1,67 @@
+"""Topology invariants (Definition 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (exponential, fully_connected, make_topology,
+                                 ring, spectral_gap, torus)
+
+
+@pytest.mark.parametrize("name", ["ring", "fully_connected", "exponential",
+                                  "torus"])
+@pytest.mark.parametrize("K", [1, 2, 3, 4, 8, 16, 32])
+def test_doubly_stochastic(name, K):
+    topo = make_topology(name, K)
+    W = topo.weights
+    assert np.allclose(W, W.T)
+    assert np.allclose(W.sum(0), 1.0)
+    assert np.allclose(W.sum(1), 1.0)
+    assert np.all(W >= -1e-12)
+
+
+@pytest.mark.parametrize("name", ["ring", "fully_connected", "exponential"])
+@pytest.mark.parametrize("K", [2, 4, 8, 16])
+def test_spectral_gap_in_range(name, K):
+    topo = make_topology(name, K)
+    rho = topo.spectral_gap
+    assert 0.0 < rho <= 1.0 + 1e-9
+
+
+def test_fully_connected_gap_is_one():
+    assert abs(fully_connected(8).spectral_gap - 1.0) < 1e-9
+
+
+def test_exponential_better_conditioned_than_ring():
+    # exp graph mixes faster than the ring at equal K
+    assert exponential(16).spectral_gap > ring(16).spectral_gap
+
+
+@given(st.integers(min_value=3, max_value=64))
+@settings(max_examples=20, deadline=None)
+def test_ring_offsets_reconstruct_matrix(K):
+    topo = ring(K)
+    W = np.zeros((K, K))
+    for k in range(K):
+        W[k, k] = topo.self_weight
+        for s, w in zip(topo.offsets, topo.offset_weights):
+            W[k, (k + s) % K] += w
+    assert np.allclose(W, topo.weights)
+
+
+def test_gossip_contraction_property():
+    """||XW - X_bar|| <= (1-rho) ||X - X_bar|| (Lemma 3)."""
+    rng = np.random.default_rng(0)
+    for name in ("ring", "exponential", "fully_connected"):
+        topo = make_topology(name, 8)
+        X = rng.normal(size=(5, 8))
+        Xb = X.mean(1, keepdims=True)
+        lhs = np.linalg.norm(X @ topo.weights - Xb)
+        rhs = (1 - topo.spectral_gap) * np.linalg.norm(X - Xb) + 1e-9
+        assert lhs <= rhs + 1e-7
+
+
+def test_neighbors_consistent_with_weights():
+    topo = ring(8)
+    for k in range(8):
+        nbrs = dict(topo.neighbors_of(k))
+        assert set(nbrs) == {(k + 1) % 8, (k - 1) % 8}
