@@ -16,8 +16,8 @@ def main() -> None:
 
     from benchmarks import (fig1_dadam_convergence, fig2_comm_cost,
                             fig3_cdadam_convergence, fig4_compression_cost,
-                            heterogeneity, kernels, roofline, speedup,
-                            topology_ablation, vision_resnet)
+                            fused_step, heterogeneity, kernels, roofline,
+                            speedup, topology_ablation, vision_resnet)
 
     benches = {
         "fig1": lambda: fig1_dadam_convergence.main(steps),
@@ -29,6 +29,8 @@ def main() -> None:
         "topology": lambda: topology_ablation.main(max(40, steps // 2)),
         "heterogeneity": lambda: heterogeneity.main(max(40, steps // 2)),
         "kernels": kernels.main,
+        "fused_step": lambda: fused_step.main(
+            size=(1 << 14) if args.quick else (1 << 16)),
         "roofline": roofline.main,
     }
     chosen = (args.only.split(",") if args.only else list(benches))

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the fast, CPU-only slice of the suite.
+#
+#   bash scripts/tier1.sh             # pytest -x -q, slow tests deselected
+#   bash scripts/tier1.sh -m ""       # override: run everything
+#
+# Forces the host-CPU backend with 8 virtual devices so the sharding /
+# collective paths (shard_map, ppermute gossip) are exercised without
+# accelerators; Pallas kernels run via interpret mode.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS=cpu
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+exec python -m pytest -x -q "$@"

@@ -68,6 +68,7 @@ def make_optimizer(
     compressor: str | Compressor = "sign",
     mixing: str = "roll",
     moment_dtype=None,
+    backend: str = "reference",
     **comp_kw,
 ) -> DecentralizedOptimizer:
     topo = make_topology(topology, K)
@@ -78,7 +79,8 @@ def make_optimizer(
             period = 1
         cfg = DAdamConfig(eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                           period=period, weight_decay=weight_decay,
-                          mixing=mixing, moment_dtype=moment_dtype)
+                          mixing=mixing, moment_dtype=moment_dtype,
+                          backend=backend)
         cfg.validate()
         return DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=None,
@@ -91,10 +93,14 @@ def make_optimizer(
     if kind in ("cd-adam", "cdadam"):
         comp = (compressor if isinstance(compressor, Compressor)
                 else make_compressor(compressor, **comp_kw))
+        if backend == "pallas" and comp.name != "sign":
+            raise ValueError(
+                "backend='pallas' fuses the sign compressor; got "
+                f"compressor={comp.name!r} (use backend='reference')")
         cfg = CDAdamConfig(eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                            period=period, weight_decay=weight_decay,
                            gamma=gamma, mixing=mixing,
-                           moment_dtype=moment_dtype)
+                           moment_dtype=moment_dtype, backend=backend)
         cfg.validate()
         return DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=comp,
@@ -106,6 +112,9 @@ def make_optimizer(
         )
 
     if kind in ("d-psgd", "dpsgd"):
+        if backend != "reference":
+            raise ValueError("d-psgd has no kernel backend; "
+                             "use backend='reference'")
         cfg = baselines.DPSGDConfig(eta=eta, weight_decay=weight_decay,
                                     period=period, mixing=mixing)
         return DecentralizedOptimizer(

@@ -99,19 +99,26 @@ def init(params_stacked: PyTree, cfg: CDAdamConfig,
                        zeros, hat_nbrs)
 
 
-def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
-                comp: Compressor) -> CDAdamState:
-    """Lines 8-11 of Alg. 2 on the half-step parameters."""
-    x_half, mom, hat_self, hat_nbrs = state_half
+def _mix_with_hats(x_half: PyTree, hat_self: PyTree,
+                   hat_nbrs: Tuple[PyTree, ...], topo: Topology,
+                   cfg: CDAdamConfig) -> PyTree:
+    """(8) local mixing using stored neighbor copies — no communication."""
 
-    # (8) local mixing using stored neighbor copies — no communication.
     def mixed(xh, hs, *hns):
         acc = jnp.zeros_like(hs, dtype=jnp.float32)
         for w, hn in zip(topo.offset_weights, hns):
             acc = acc + w * (hn.astype(jnp.float32) - hs.astype(jnp.float32))
         return (xh.astype(jnp.float32) + cfg.gamma * acc).astype(xh.dtype)
 
-    x_new = jax.tree_util.tree_map(mixed, x_half, hat_self, *hat_nbrs)
+    return jax.tree_util.tree_map(mixed, x_half, hat_self, *hat_nbrs)
+
+
+def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
+                comp: Compressor) -> CDAdamState:
+    """Lines 8-11 of Alg. 2 on the half-step parameters."""
+    x_half, mom, hat_self, hat_nbrs = state_half
+
+    x_new = _mix_with_hats(x_half, hat_self, hat_nbrs, topo, cfg)
 
     # (9) compress the residual against our own xhat.
     resid = jax.tree_util.tree_map(lambda a, b: a - b, x_new, hat_self)
@@ -135,6 +142,42 @@ def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
     return CDAdamState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))
 
 
+def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
+                       cfg: CDAdamConfig) -> CDAdamState:
+    """Lines 8-11 of Alg. 2 with the sign compressor fused into Pallas
+    kernels (interpret mode off-TPU).
+
+    Per leaf, one (K, blocks)-grid kernel pair computes the int8 sign
+    payload, the per-worker L1 scale AND the ``xhat_k += q_k`` update in a
+    single VMEM pass over (x_new, xhat) — fusing reference steps (9) and
+    (11a). Compression stays per-(worker, leaf), so the math is identical
+    to the reference path with ``compressor='sign'``. Neighbor copies
+    (10)+(11b) are then updated from the *payload* — the int8 q and the
+    (K,) scales roll over the worker dim, which is exactly the compressed
+    byte count on the wire when the dim is sharded."""
+    from repro.kernels import ops
+
+    x_half, mom, hat_self, hat_nbrs = state_half
+    x_new = _mix_with_hats(x_half, hat_self, hat_nbrs, topo, cfg)
+
+    enc = jax.tree_util.tree_map(
+        lambda xl, hl: ops.sign_compress_stacked(xl, hl), x_new, hat_self)
+    is_enc = lambda t: isinstance(t, tuple)
+    q = jax.tree_util.tree_map(lambda t: t[0], enc, is_leaf=is_enc)
+    scale = jax.tree_util.tree_map(lambda t: t[1], enc, is_leaf=is_enc)
+    new_hat_self = jax.tree_util.tree_map(lambda t: t[2], enc, is_leaf=is_enc)
+
+    new_hat_nbrs = []
+    for s, hn in zip(topo.offsets, hat_nbrs):
+        def upd(h, qb, sc, s=s):
+            q_recv = jnp.roll(qb, -s, axis=0)
+            sc_recv = jnp.roll(sc, -s).reshape((-1,) + (1,) * (qb.ndim - 1))
+            return h + (sc_recv * q_recv.astype(jnp.float32)).astype(h.dtype)
+        new_hat_nbrs.append(jax.tree_util.tree_map(upd, hn, q, scale))
+
+    return CDAdamState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))
+
+
 def step(state: CDAdamState, grads: PyTree, topo: Topology,
          cfg: CDAdamConfig, comp: Compressor) -> CDAdamState:
     """One iteration of Alg. 2 (stacked mode)."""
@@ -142,15 +185,14 @@ def step(state: CDAdamState, grads: PyTree, topo: Topology,
     half_state = CDAdamState(half, mom, state.hat_self, state.hat_nbrs)
     if topo.K == 1:
         return half_state
+    if cfg.backend == "pallas":
+        comm = lambda s: _comm_round_pallas(s, topo, cfg)
+    else:
+        comm = lambda s: _comm_round(s, topo, cfg, comp)
     if cfg.period == 1:
-        return _comm_round(half_state, topo, cfg, comp)
+        return comm(half_state)
     do_comm = (mom.count % cfg.period) == 0
-    return jax.lax.cond(
-        do_comm,
-        lambda s: _comm_round(s, topo, cfg, comp),
-        lambda s: s,
-        half_state,
-    )
+    return jax.lax.cond(do_comm, comm, lambda s: s, half_state)
 
 
 def round_step(state: CDAdamState,
@@ -167,6 +209,8 @@ def round_step(state: CDAdamState,
     inner, _ = jax.lax.scan(body, state, batches)
     if topo.K == 1:
         return inner
+    if cfg.backend == "pallas":
+        return _comm_round_pallas(inner, topo, cfg)
     return _comm_round(inner, topo, cfg, comp)
 
 

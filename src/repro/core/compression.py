@@ -131,7 +131,10 @@ def topk(fraction: float = 1.0 / 16.0) -> Compressor:
         apply=_apply,
         encode=_encode,
         decode=_decode,
-        delta_bound=lambda d: fraction,
+        # exact: k coords kept out of d; round(d*fraction) can land BELOW
+        # d*fraction, in which case an equal-magnitude input achieves the
+        # bound with equality (so reporting plain `fraction` would be wrong)
+        delta_bound=lambda d: _k(d) / max(d, 1),
         wire_bytes=lambda shape, dtype: _k(int(np.prod(shape)))
         * (jnp.dtype(dtype).itemsize + 4),
     )
@@ -176,7 +179,7 @@ def randk(fraction: float = 1.0 / 16.0, seed: int = 0) -> Compressor:
         apply=_apply,
         encode=_encode,
         decode=_decode,
-        delta_bound=lambda d: fraction,
+        delta_bound=lambda d: _k(d) / max(d, 1),
         wire_bytes=lambda shape, dtype: _k(int(np.prod(shape)))
         * (jnp.dtype(dtype).itemsize + 4),
     )

@@ -50,6 +50,9 @@ class DAdamConfig:
     mixing: str = "roll"        # 'dense' | 'roll' (stacked) — 'axis' variant
                                 # is selected by calling gossip_axis
     moment_dtype: Optional[Any] = None  # e.g. jnp.bfloat16 for huge models
+    backend: str = "reference"  # 'reference' (jnp tree_map) | 'pallas'
+                                # (fused one-pass kernel over the packed
+                                # parameter vector; interpret mode off-TPU)
 
     def validate(self) -> None:
         if not 0 <= self.beta1 < 1 or not 0 <= self.beta2 < 1:
@@ -60,6 +63,13 @@ class DAdamConfig:
             raise ValueError("period p must be >= 1")
         if self.mixing not in ("dense", "roll"):
             raise ValueError(f"unknown mixing {self.mixing!r}")
+        if self.backend not in ("reference", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend == "pallas" and self.bias_correction:
+            raise ValueError(
+                "backend='pallas' implements the paper's Alg. 1 update "
+                "(no bias correction); use backend='reference' for "
+                "bias_correction=True")
 
 
 class AdamMoments(NamedTuple):
@@ -82,11 +92,41 @@ def init_moments(params: PyTree, cfg: DAdamConfig) -> AdamMoments:
     )
 
 
+def _local_update_pallas(
+    params: PyTree, grads: PyTree, mom: AdamMoments, cfg: DAdamConfig
+) -> Tuple[PyTree, PyTree, PyTree]:
+    """Alg. 1 lines 4-6 as ONE fused kernel pass over the whole parameter
+    vector: the pytree is packed into a lane-aligned buffer (the update is
+    elementwise, so worker/leaf boundaries are irrelevant), updated in VMEM
+    tiles, and unpacked. Moments keep their own (possibly narrower) dtype
+    via a second spec over the same layout."""
+    from repro.kernels import ops
+    from repro.kernels import pack as packing
+    from repro.kernels.fused_adam import BLOCK_ROWS
+
+    spec_p = packing.make_spec(params, block_rows=BLOCK_ROWS)
+    spec_m = packing.make_spec(mom.m, block_rows=BLOCK_ROWS)
+    po, mo, vo = ops.fused_adam(
+        packing.pack(params, spec_p),
+        packing.pack(grads, spec_p),
+        packing.pack(mom.m, spec_m),
+        packing.pack(mom.v, spec_m),
+        eta=cfg.eta, beta1=cfg.beta1, beta2=cfg.beta2, tau=cfg.tau,
+        weight_decay=cfg.weight_decay)
+    return (packing.unpack(po, spec_p), packing.unpack(mo, spec_m),
+            packing.unpack(vo, spec_m))
+
+
 def local_update(
     params: PyTree, grads: PyTree, mom: AdamMoments, cfg: DAdamConfig
 ) -> Tuple[PyTree, AdamMoments]:
     """Lines 3-6 of Alg. 1 — elementwise, stacked-K transparent."""
     count = mom.count + 1
+
+    if cfg.backend == "pallas":
+        new_params, new_m, new_v = _local_update_pallas(params, grads, mom,
+                                                        cfg)
+        return new_params, AdamMoments(new_m, new_v, count)
 
     def upd(x, g, m, v):
         g = g.astype(m.dtype)

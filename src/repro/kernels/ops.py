@@ -37,6 +37,10 @@ def sign_compress(x, hat, *, interpret: Optional[bool] = None):
     return _sc.sign_compress(x, hat, interpret=_interpret(interpret))
 
 
+def sign_compress_stacked(x, hat, *, interpret: Optional[bool] = None):
+    return _sc.sign_compress_stacked(x, hat, interpret=_interpret(interpret))
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
                     block_kv=512, interpret: Optional[bool] = None):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,

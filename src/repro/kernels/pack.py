@@ -1,0 +1,139 @@
+"""Pytree <-> lane-aligned buffer packing for the Pallas optimizer kernels.
+
+The fused-Adam / sign-compress kernels operate on (rows, 128) VMEM-tileable
+buffers; optimizer state lives as ragged parameter pytrees. This module is
+the bridge: a ``PackSpec`` captures the leaf layout of a tree once, and
+``pack`` / ``unpack`` move congruent trees in and out of a single flat
+buffer.
+
+Two layouts:
+
+* **flat** (``make_spec(tree)``): every element of every leaf — including a
+  stacked worker dim — is concatenated into one (rows, LANE) buffer, so the
+  whole parameter vector is ONE kernel launch. This is what the fused-Adam
+  dispatch uses: the update is elementwise, so worker/leaf boundaries don't
+  affect the math.
+* **stacked** (``make_spec(tree, stacked=True)``): the leading worker dim K
+  is preserved; per-worker contents are concatenated and padded to a
+  (K, rows, LANE) buffer whose row k holds exactly worker k's elements.
+
+  NOTE: CD-Adam's pallas comm round does NOT pack — it launches
+  ``sign_compress_stacked`` per leaf, because the reference semantics put
+  one compression scale per (worker, leaf) and whole-tree packing would
+  coarsen that to one scale per worker (different math, no parity). The
+  stacked layout is for worker-dim-preserving buffer transport (e.g. a
+  future whole-vector compressor that deliberately opts into per-worker
+  scales).
+
+Padding is to whole (block_rows, LANE) tiles so the kernels never re-pad.
+Mixed-dtype trees are packed in the widest participating float dtype
+(``jnp.result_type``) and cast back per leaf on unpack, which is lossless
+for the bf16-in-f32 case; the pack/unpack pair is an exact inverse.
+
+All sizes in the spec are Python ints — specs are hashable static data,
+safe to close over in jitted functions.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+LANE = 128
+
+
+class PackSpec(NamedTuple):
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]   # full leaf shapes (incl. K if stacked)
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]                # per-(worker-)leaf element counts
+    n: int                                # true elements per worker (sum sizes)
+    rows: int                             # padded row count: rows*LANE >= n
+    k: Optional[int]                      # worker count; None in flat mode
+
+    @property
+    def stacked(self) -> bool:
+        return self.k is not None
+
+    @property
+    def padded(self) -> int:
+        return self.rows * LANE
+
+
+def make_spec(tree: PyTree, *, stacked: bool = False,
+              block_rows: int = 1) -> PackSpec:
+    """Record the layout of ``tree``; pad up to whole (block_rows, LANE)
+    tiles. Any tree congruent with ``tree`` (same treedef + leaf shapes) can
+    then be packed against this spec, regardless of leaf dtypes."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    k: Optional[int] = None
+    if stacked:
+        ks = {s[0] if s else None for s in shapes}
+        if len(ks) != 1 or None in ks:
+            raise ValueError(
+                f"stacked pack needs a shared leading worker dim; got {shapes}")
+        (k,) = ks
+        sizes = tuple(int(np.prod(s[1:], dtype=np.int64)) for s in shapes)
+    else:
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    n = sum(sizes)
+    per_tile = block_rows * LANE
+    padded = n + (-n) % per_tile
+    return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    sizes=sizes, n=n, rows=padded // LANE, k=k)
+
+
+def _check_congruent(leaves, spec: PackSpec) -> None:
+    got = tuple(tuple(l.shape) for l in leaves)
+    if got != spec.shapes:
+        raise ValueError(f"tree does not match spec: {got} vs {spec.shapes}")
+
+
+def pack(tree: PyTree, spec: PackSpec, dtype: Any = None) -> jax.Array:
+    """Flatten ``tree`` into a (rows, LANE) — or (K, rows, LANE) — buffer.
+
+    ``dtype`` defaults to the widest dtype among the leaves; padding is
+    zeros (the kernels' reductions are pad-safe for zero fill)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    _check_congruent(leaves, spec)
+    dt = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*leaves)
+    if spec.stacked:
+        parts = [l.reshape(spec.k, -1).astype(dt) for l in leaves]
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        if spec.padded != spec.n:
+            flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.n)))
+        return flat.reshape(spec.k, spec.rows, LANE)
+    parts = [l.reshape(-1).astype(dt) for l in leaves]
+    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    if spec.padded != spec.n:
+        flat = jnp.pad(flat, (0, spec.padded - spec.n))
+    return flat.reshape(spec.rows, LANE)
+
+
+def unpack(buf: jax.Array, spec: PackSpec) -> PyTree:
+    """Exact inverse of ``pack``: strip padding, split, restore per-leaf
+    shape and dtype."""
+    offsets = np.cumsum((0,) + spec.sizes)[:-1]
+    if spec.stacked:
+        flat = buf.reshape(spec.k, -1)
+        leaves = [
+            flat[:, o:o + sz].astype(dt).reshape(shape)
+            for o, sz, dt, shape in zip(offsets, spec.sizes, spec.dtypes,
+                                        spec.shapes)
+        ]
+    else:
+        flat = buf.reshape(-1)
+        leaves = [
+            flat[o:o + sz].astype(dt).reshape(shape)
+            for o, sz, dt, shape in zip(offsets, spec.sizes, spec.dtypes,
+                                        spec.shapes)
+        ]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)

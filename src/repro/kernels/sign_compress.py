@@ -13,6 +13,10 @@ sign operator [4], made delta-contractive by the L1 scale), then applies
 
 The scale reduction stays exact: block partials are summed in fp32 by XLA
 between the two kernels.
+
+``sign_compress_stacked`` is the same pair of kernels lifted to a stacked
+(K, ...) worker dim with a 2-D grid: one scale per worker, matching the
+vmap-per-worker semantics of the reference CD-Adam encode path.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANE = 128
 BLOCK_ROWS = 256
@@ -76,8 +81,10 @@ def sign_compress(x: jax.Array, hat: jax.Array, *,
         _apply_kernel,
         grid=grid,
         in_specs=[spec, spec,
+                  # scalar operand: SMEM, not ANY — Mosaic can't load
+                  # directly from an ANY-space ref on real TPUs
                   pl.BlockSpec((1, 1), lambda i: (0, 0),
-                               memory_space=pl.ANY)],
+                               memory_space=pltpu.SMEM)],
         out_specs=[spec, spec],
         out_shape=[
             jax.ShapeDtypeStruct(xx.shape, jnp.int8),
@@ -90,6 +97,90 @@ def sign_compress(x: jax.Array, hat: jax.Array, *,
         flat = t.reshape(-1)
         if n_pad:
             flat = flat[:n]
+        return flat.reshape(shape)
+
+    return unprep(q, x.shape), scale, unprep(hat_new, hat.shape)
+
+
+# --------------------------- stacked-K variant ------------------------------
+
+
+def _absmean_stacked_kernel(x_ref, h_ref, out_ref):
+    d = x_ref[...].astype(jnp.float32) - h_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(jnp.abs(d))
+
+
+def _apply_stacked_kernel(x_ref, h_ref, scale_ref, q_ref, ho_ref):
+    d = x_ref[...].astype(jnp.float32) - h_ref[...].astype(jnp.float32)
+    s = jnp.sign(d)
+    q_ref[...] = s.astype(jnp.int8)
+    ho_ref[...] = (h_ref[...].astype(jnp.float32)
+                   + scale_ref[0, 0] * s).astype(ho_ref.dtype)
+
+
+def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
+                          block_rows: int = BLOCK_ROWS,
+                          interpret: bool = False
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-worker sign compression over a stacked (K, ...) tensor.
+
+    Returns (q int8 [x.shape], scale f32 [K], hat_new [hat.dtype]); row k
+    of every output depends only on row k of the inputs — identical to
+    vmapping :func:`sign_compress` over the worker dim, but lowered as one
+    (K, blocks)-grid kernel pair so the worker dim can stay sharded."""
+    if x.ndim < 1:
+        raise ValueError("stacked sign compress needs a leading worker dim")
+    K = x.shape[0]
+    n = x.size // max(K, 1)
+    if n == 0:  # zero-element leaves: nothing to compress (reference path
+        #         is a no-op on empties too; avoid a 0-row pallas grid)
+        return (jnp.zeros(x.shape, jnp.int8), jnp.zeros((K,), jnp.float32),
+                hat)
+    per_block = block_rows * LANE
+    n_pad = (-n) % per_block
+
+    def prep(t):
+        flat = t.reshape(K, -1)
+        if n_pad:
+            flat = jnp.pad(flat, ((0, 0), (0, n_pad)))
+        return flat.reshape(K, -1, LANE)
+
+    xx, hh = prep(x), prep(hat)
+    rows = xx.shape[1]
+    grid = (K, rows // block_rows)
+    spec = pl.BlockSpec((1, block_rows, LANE), lambda k, i: (k, i, 0))
+
+    partials = pl.pallas_call(
+        _absmean_stacked_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 1), lambda k, i: (k, i)),
+        out_shape=jax.ShapeDtypeStruct((K, grid[1]), jnp.float32),
+        interpret=interpret,
+    )(xx, hh)
+    # padded entries are x=0, hat=0 -> contribute 0; divide by the true
+    # per-worker element count.
+    scale = jnp.sum(partials, axis=1) / n
+    scale2d = scale.reshape(K, 1)
+
+    q, hat_new = pl.pallas_call(
+        _apply_stacked_kernel,
+        grid=grid,
+        in_specs=[spec, spec,
+                  pl.BlockSpec((1, 1), lambda k, i: (k, 0),
+                               memory_space=pltpu.SMEM)],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(xx.shape, jnp.int8),
+            jax.ShapeDtypeStruct(hh.shape, hat.dtype),
+        ],
+        interpret=interpret,
+    )(xx, hh, scale2d)
+
+    def unprep(t, shape):
+        flat = t.reshape(K, -1)
+        if n_pad:
+            flat = flat[:, :n]
         return flat.reshape(shape)
 
     return unprep(q, x.shape), scale, unprep(hat_new, hat.shape)

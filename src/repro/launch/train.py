@@ -59,6 +59,10 @@ def main() -> None:
     ap.add_argument("--gamma", type=float, default=0.4)
     ap.add_argument("--eta", type=float, default=1e-3)
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="optimizer execution backend (pallas = fused "
+                         "kernels; interpret mode off-TPU)")
     ap.add_argument("--skew", type=float, default=0.5,
                     help="non-IID-ness of worker shards")
     ap.add_argument("--ckpt", default="")
@@ -71,7 +75,8 @@ def main() -> None:
     api = build_model(cfg)
     opt = make_optimizer(args.optimizer, K=args.workers, eta=args.eta,
                          period=args.period, topology=args.topology,
-                         gamma=args.gamma, compressor=args.compressor)
+                         gamma=args.gamma, compressor=args.compressor,
+                         backend=args.backend)
     trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt)
     params = api.init(jax.random.PRNGKey(0))
     state = trainer.init(params)
@@ -79,7 +84,7 @@ def main() -> None:
     print(f"[train] {args.arch} ({'full' if args.full else 'reduced'}) "
           f"N={n_params/1e6:.1f}M x {args.workers} workers "
           f"opt={args.optimizer} p={args.period} "
-          f"topo={args.topology}")
+          f"topo={args.topology} backend={args.backend}")
 
     it = make_batch_iter(cfg, args.workers, args.batch, args.seq, args.skew)
     t0 = time.perf_counter()

@@ -68,7 +68,11 @@ def test_skip_rounds_freeze_hats():
     assert float(jnp.sum(jnp.abs(state.hat_self["x"]))) == 0.0
 
 
-@pytest.mark.parametrize("comp_name", ["sign", "topk", "quantize"])
+@pytest.mark.parametrize("comp_name", [
+    "sign",  # the paper's operator stays in tier-1
+    pytest.param("topk", marks=pytest.mark.slow),
+    pytest.param("quantize", marks=pytest.mark.slow),
+])
 def test_convergence_homogeneous(comp_name):
     K, d = 8, 16
     c = jax.random.normal(KEY, (1, d))

@@ -68,6 +68,7 @@ class TestData:
 
 
 class TestPaperModels:
+    @pytest.mark.slow
     def test_deepfm_learns(self):
         task = make_ctr_task(0, n_fields=4, features_per_field=16)
         params = init_deepfm(KEY, task.n_features, task.n_fields,
@@ -85,6 +86,7 @@ class TestPaperModels:
         batch = ctr_batch(task, KEY, 32)
         assert not bool(jnp.isnan(widedeep_loss(params, batch)))
 
+    @pytest.mark.slow
     def test_resnet20_shapes_and_grad(self):
         params = init_resnet20(KEY, width=8)
         images = jax.random.normal(KEY, (4, 32, 32, 3))
@@ -171,6 +173,7 @@ class TestTrainerAccounting:
 
 
 class TestMicrobatchGrad:
+    @pytest.mark.slow
     def test_accumulated_equals_full_batch(self):
         """make_worker_grad(loss, M) must equal the full-batch gradient
         when the loss is a mean over the batch (CE losses are)."""

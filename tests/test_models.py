@@ -28,6 +28,7 @@ def max_err(a, b):
 
 
 class TestDense:
+    @pytest.mark.slow
     def test_decode_matches_forward(self):
         cfg = dense_cfg()
         api = build_model(cfg)
@@ -37,6 +38,7 @@ class TestDense:
         ld, _ = api.decode_step(p, cache, TOKS[:, 16])
         assert max_err(ld, lf[:, 16, :]) < 1e-4
 
+    @pytest.mark.slow
     def test_sliding_window_decode_matches(self):
         cfg = dense_cfg(sliding_window=8)
         api = build_model(cfg)
@@ -46,6 +48,7 @@ class TestDense:
         ld, _ = api.decode_step(p, cache, TOKS[:, 16])
         assert max_err(ld, lf[:, 16, :]) < 1e-4
 
+    @pytest.mark.slow
     def test_multi_token_decode_chain(self):
         cfg = dense_cfg()
         api = build_model(cfg)
@@ -68,6 +71,7 @@ class TestDense:
 
 
 class TestChunkedAttention:
+    pytestmark = pytest.mark.slow
     @pytest.mark.parametrize("causal,window", [(True, 0), (True, 24),
                                                (False, 0)])
     def test_matches_naive(self, causal, window):
@@ -79,6 +83,7 @@ class TestChunkedAttention:
                                   chunk_q=16, chunk_kv=16)
         assert max_err(out.reshape(ref.shape), ref) < 1e-5
 
+    @pytest.mark.slow
     def test_grad_matches_naive(self):
         q = jax.random.normal(KEY, (1, 32, 2, 8))
         k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 32, 2, 8))
@@ -91,6 +96,7 @@ class TestChunkedAttention:
 
 
 class TestMoE:
+    @pytest.mark.slow
     def test_decode_matches_forward_with_ample_capacity(self):
         cfg = ModelConfig(arch_id="m", family="moe", n_layers=2, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
@@ -116,6 +122,7 @@ class TestMoE:
         assert float(jnp.max(jnp.abs(out))) == 0.0
         assert float(aux) > 0.0
 
+    @pytest.mark.slow
     def test_top1_vs_top2_flops_visible(self):
         params = init_moe(KEY, 32, 64, 8, jnp.float32)
         x = jax.random.normal(KEY, (1, 16, 32))
@@ -126,6 +133,7 @@ class TestMoE:
 
 
 class TestRWKV:
+    pytestmark = pytest.mark.slow
     CFG = ModelConfig(arch_id="r", family="ssm", n_layers=2, d_model=64,
                       n_heads=2, n_kv_heads=2, d_ff=224, vocab_size=97,
                       rwkv_head_size=32, rwkv_decay_rank=8)
@@ -160,6 +168,7 @@ class TestRWKV:
 
 
 class TestHybrid:
+    pytestmark = pytest.mark.slow
     CFG = ModelConfig(arch_id="z", family="hybrid", n_layers=5, d_model=64,
                       n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
                       ssm_state=16, ssm_heads=4, shared_attn_period=2)
@@ -186,6 +195,7 @@ class TestHybrid:
 
 
 class TestWhisper:
+    pytestmark = pytest.mark.slow
     CFG = ModelConfig(arch_id="w", family="audio", n_layers=2, d_model=64,
                       n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
                       n_encoder_layers=2, n_audio_ctx=10, mlp_kind="gelu",

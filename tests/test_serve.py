@@ -25,6 +25,7 @@ def make_prompt(cfg, batch=2, seq=12):
 
 
 @pytest.mark.parametrize("arch_id", list_archs())
+@pytest.mark.slow
 def test_cache_spec_matches_actual_prefill(arch_id):
     """cache_spec's ShapeDtypeStructs must exactly match the cache a real
     prefill produces — the dry-run depends on this contract."""
@@ -79,6 +80,7 @@ def test_windowed_cache_is_window_sized():
     assert spec.k.shape[2] == 8
 
 
+@pytest.mark.slow
 def test_greedy_generate():
     cfg = get_reduced("llama3.2-1b").model
     api = build_model(cfg)
@@ -89,6 +91,7 @@ def test_greedy_generate():
     assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
 
 
+@pytest.mark.slow
 def test_greedy_generate_deterministic():
     cfg = get_reduced("yi-6b").model
     api = build_model(cfg)

@@ -12,6 +12,8 @@ from repro.configs import get_reduced, list_archs
 from repro.core import make_optimizer
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # full arch sweep; minutes of compile time
+
 KEY = jax.random.PRNGKey(0)
 SEQ = 24
 BATCH = 2

@@ -15,6 +15,8 @@ import numpy as np
 import pytest
 
 from repro.core import make_optimizer
+
+pytestmark = pytest.mark.slow  # multi-hundred-step training runs
 from repro.data import ctr_batch_stacked, make_ctr_task
 from repro.models.deepfm import deepfm_logits, deepfm_loss, init_deepfm
 from repro.train import DecentralizedTrainer

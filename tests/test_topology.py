@@ -1,7 +1,11 @@
-"""Topology invariants (Definition 1)."""
+"""Topology invariants (Definition 1).
+
+Formerly hypothesis-driven; the @given ranges are now explicit K tables
+(edges: smallest ring, even/odd, powers of two, off-by-one, the old upper
+bound) so the suite runs with stdlib pytest only.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import (exponential, fully_connected, make_topology,
                                  ring, spectral_gap, torus)
@@ -36,8 +40,7 @@ def test_exponential_better_conditioned_than_ring():
     assert exponential(16).spectral_gap > ring(16).spectral_gap
 
 
-@given(st.integers(min_value=3, max_value=64))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("K", [3, 4, 5, 7, 8, 9, 16, 31, 32, 33, 63, 64])
 def test_ring_offsets_reconstruct_matrix(K):
     topo = ring(K)
     W = np.zeros((K, K))
