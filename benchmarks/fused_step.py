@@ -1,30 +1,44 @@
 """Reference-vs-Pallas optimizer step latency + bytes-moved accounting.
 
-Times one jitted optimizer step (the in-graph comm-skip cond included) for
-``backend='reference'`` and ``backend='pallas'`` over a stacked synthetic
-parameter pytree, for both D-Adam and CD-Adam, and emits:
+Times one jitted optimizer step (the in-graph comm-skip cond included)
+over a stacked synthetic parameter pytree, for both D-Adam and CD-Adam,
+across three execution paths:
 
-* the usual CSV rows (``emit``), and
-* one JSON record (line prefixed ``JSON``) with per-step latency for both
-  backends plus the analytic HBM / wire byte counts.
+* ``reference``        — jnp tree_map update + roll gossip,
+* ``pallas_resident``  — the packed-resident runtime: state stays in the
+  (K, rows, 128) layout across steps, grads enter as a packed buffer,
+  fused-Adam / gossip / sign-compress kernels run on resident buffers
+  with zero per-step pack/unpack, and
+* ``pallas_repack``    — the PR-1 dispatch that re-packs the pytree state
+  around the kernels every step (kept precisely to expose what residency
+  saves).
 
-On CPU the Pallas kernels execute in interpret mode, so the pallas column
-is a CORRECTNESS path here, not a speed claim — the meaningful numbers on
-this host are the reference-XLA latencies and the byte accounting; on TPU
-the same dispatch compiles to Mosaic. Sizes are deliberately modest so
-interpret mode finishes in seconds (``--size`` scales them up on real
-hardware).
+Each timed loop threads the stepped state back in and calls
+``jax.block_until_ready`` on it INSIDE the loop — without that, XLA's
+async dispatch lets the cheap paths under-report by returning before the
+step has executed. The JSON record carries per-step latency for all three
+paths, the analytic HBM / wire byte counts, and the jax version +
+platform the numbers were measured on.
+
+On CPU the Pallas kernels execute in interpret mode, so the pallas
+columns are a CORRECTNESS path here, not a speed claim — the meaningful
+numbers on this host are the reference-XLA latencies and the byte
+accounting; on TPU the same dispatch compiles to Mosaic. Sizes are
+deliberately modest so interpret mode finishes in seconds (``--size``
+scales them up on real hardware).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.core import make_optimizer
+from benchmarks.common import emit
+from repro.core import cdadam, dadam, make_compressor, make_optimizer
+from repro.kernels import pack as packing
 
 LANE = 128
 
@@ -42,37 +56,92 @@ def make_params(key, K: int, size: int):
     }
 
 
+def time_stepped(step, state, grads, iters: int = 3, warmup: int = 1
+                 ) -> float:
+    """us per step, threading the stepped state through the loop and
+    blocking on it inside the timed region."""
+    s = state
+    for _ in range(warmup):
+        s = jax.block_until_ready(step(s, grads))
+    s = state
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        s = jax.block_until_ready(step(s, grads))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _repack_state_and_step(kind: str, opt, params):
+    """The PR-1 pallas path: pytree state, pack/unpack around the kernels
+    every step. Reconstructed from the raw NamedTuple states so the
+    resident runtime (which `opt.init` now returns) can be compared
+    against it."""
+    cfg, topo = opt.cfg, opt.topo
+    if kind == "d-adam":
+        state = dadam.DAdamState(params, dadam.init_moments(params, cfg))
+        return state, jax.jit(lambda s, g: dadam.step(s, g, topo, cfg))
+    comp = make_compressor("sign")
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    hat_nbrs = tuple(jax.tree_util.tree_map(jnp.zeros_like, params)
+                     for _ in topo.offsets)
+    state = cdadam.CDAdamState(params, dadam.init_moments(params, cfg),
+                               zeros, hat_nbrs)
+    return state, jax.jit(lambda s, g: cdadam.step(s, g, topo, cfg, comp))
+
+
 def bench_kind(kind: str, K: int, size: int, period: int) -> dict:
     key = jax.random.PRNGKey(0)
     params = make_params(key, K, size)
-    grads = jax.tree_util.tree_map(
-        lambda x: 0.1 * x + 0.01, params)
+    grads = jax.tree_util.tree_map(lambda x: 0.1 * x + 0.01, params)
     n = sum(x.size for x in jax.tree_util.tree_leaves(params))
     rec: dict = {"kind": kind, "workers": K, "elements": int(n)}
 
-    for backend in ("reference", "pallas"):
-        opt = make_optimizer(kind, K=K, eta=1e-3, period=period,
-                             backend=backend)
-        state = opt.init(jax.tree_util.tree_map(jnp.copy, params))
-        step = jax.jit(lambda s, g, opt=opt: opt.step(s, g))
-        us = time_fn(step, state, grads, iters=3, warmup=1)
-        rec[f"{backend}_us_per_step"] = round(us, 1)
-        emit(f"fused_step/{kind}_{backend}", us,
-             f"{n * 4 / (us / 1e6) / 1e9:.2f}GB/s param-touch")
-        if kind == "cd-adam":
-            rec["wire_bytes_per_round"] = opt.comm_bytes_per_round(
-                opt.params_of(state))
+    # reference backend: pytree state, jnp tree_map + roll gossip
+    opt = make_optimizer(kind, K=K, eta=1e-3, period=period,
+                         backend="reference")
+    state = opt.init(jax.tree_util.tree_map(jnp.copy, params))
+    us = time_stepped(jax.jit(lambda s, g: opt.step(s, g)), state, grads)
+    rec["reference_us_per_step"] = round(us, 1)
+    emit(f"fused_step/{kind}_reference", us,
+         f"{n * 4 / (us / 1e6) / 1e9:.2f}GB/s param-touch")
+    if kind == "cd-adam":
+        rec["wire_bytes_per_round"] = opt.comm_bytes_per_round(
+            opt.params_of(state))
+
+    # pallas resident: packed state across steps, packed grads in
+    popt = make_optimizer(kind, K=K, eta=1e-3, period=period,
+                          backend="pallas")
+    pstate = popt.init(jax.tree_util.tree_map(jnp.copy, params))
+    gbuf = packing.pack(grads, pstate.spec, dtype=pstate.buf.dtype)
+    us_res = time_stepped(jax.jit(lambda s, g: popt.step(s, g)), pstate,
+                          gbuf)
+    rec["pallas_resident_us_per_step"] = round(us_res, 1)
+    rec["pallas_us_per_step"] = rec["pallas_resident_us_per_step"]
+    emit(f"fused_step/{kind}_pallas_resident", us_res,
+         f"{n * 4 / (us_res / 1e6) / 1e9:.2f}GB/s param-touch")
+
+    # pallas repack: the pre-residency dispatch, pack/unpack every step
+    rstate, rstep = _repack_state_and_step(kind, popt, params)
+    us_rep = time_stepped(rstep, rstate, grads)
+    rec["pallas_repack_us_per_step"] = round(us_rep, 1)
+    rec["resident_speedup_vs_repack"] = round(us_rep / max(us_res, 1e-9), 2)
+    emit(f"fused_step/{kind}_pallas_repack", us_rep,
+         f"resident {rec['resident_speedup_vs_repack']}x vs repack")
 
     # analytic HBM traffic of the local Adam update, f32 elements:
-    # unfused XLA ~11 round-trips (separate m/v/rsqrt/axpy passes) vs the
-    # fused kernel's 4 reads + 3 writes.
+    # unfused XLA ~11 round-trips (separate m/v/rsqrt/axpy passes); the
+    # fused kernel on resident buffers is 4 reads + 3 writes; the repack
+    # dispatch adds a read+write per packed operand (4 packs + 3 unpacks).
     rec["adam_hbm_bytes_unfused"] = int(n * 4 * 11)
-    rec["adam_hbm_bytes_fused"] = int(n * 4 * 7)
+    rec["adam_hbm_bytes_fused_resident"] = int(n * 4 * 7)
+    rec["adam_hbm_bytes_fused_repack"] = int(n * 4 * (7 + 4 * 2 + 3 * 2))
+    rec["adam_hbm_bytes_fused"] = rec["adam_hbm_bytes_fused_resident"]
     return rec
 
 
 def main(workers: int = 8, size: int = 1 << 16, period: int = 1) -> dict:
     record = {"benchmark": "fused_step",
+              "jax_version": jax.__version__,
+              "platform": jax.default_backend(),
               "records": [bench_kind(k, workers, size, period)
                           for k in ("d-adam", "cd-adam")]}
     print("JSON " + json.dumps(record))

@@ -14,4 +14,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
 
-exec python -m pytest -x -q "$@"
+# Parallelize across cores when pytest-xdist is available (CI installs it;
+# falls back to serial where it isn't). The wall clock is dominated by
+# per-test jit compiles, which parallelize embarrassingly well.
+# -x still aborts the whole session on first failure under xdist;
+# --max-worker-restart 0 keeps a crashed worker from respawning past it,
+# and the cache provider is disabled so workers don't race on .pytest_cache.
+XDIST_ARGS=()
+if python -c "import xdist" >/dev/null 2>&1; then
+  XDIST_ARGS=(-n auto --max-worker-restart 0 -p no:cacheprovider)
+fi
+
+exec python -m pytest -x -q "${XDIST_ARGS[@]}" "$@"

@@ -3,6 +3,15 @@
 Format: one ``.npz`` holding flattened leaves keyed by their tree path +
 a JSON sidecar with the treedef / step / config hash. Atomic via
 write-to-temp + rename. Works for optimizer states (NamedTuples) too.
+
+Packed-resident optimizer states (``backend='pallas'``'s
+``PackedDAdamState`` / ``PackedCDAdamState``) are transparently
+**unpacked to their portable NamedTuple form on save and repacked on
+restore**: the bytes on disk are always the backend-agnostic pytree
+layout, so a checkpoint written under ``backend='pallas'`` restores
+bit-identically under ``backend='reference'`` and vice versa. The
+pack/unpack here is a checkpoint *boundary* — the steady-state training
+loop never touches it.
 """
 from __future__ import annotations
 
@@ -16,6 +25,25 @@ import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+
+def _packed_types() -> tuple:
+    # lazy: keeps checkpoint importable without pulling the kernel stack
+    from repro.core.cdadam import PackedCDAdamState
+    from repro.core.dadam import PackedDAdamState
+    return (PackedDAdamState, PackedCDAdamState)
+
+
+def _is_packed(x: Any) -> bool:
+    return isinstance(x, _packed_types())
+
+
+def _to_portable(tree: PyTree) -> PyTree:
+    """Replace packed-resident optimizer states by their unpacked
+    (backend-portable) NamedTuple equivalents, leaving the rest alone."""
+    return jax.tree_util.tree_map(
+        lambda x: x.unpacked() if _is_packed(x) else x, tree,
+        is_leaf=_is_packed)
 
 
 def _path_str(path) -> str:
@@ -34,6 +62,7 @@ def _path_str(path) -> str:
 
 def save(path: str, tree: PyTree, *, step: int = 0,
          meta: Optional[Dict[str, Any]] = None) -> None:
+    tree = _to_portable(tree)
     leaves = jax.tree_util.tree_leaves_with_path(tree)
     arrays = {}
     order = []
@@ -63,7 +92,21 @@ def save(path: str, tree: PyTree, *, step: int = 0,
 
 
 def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like`` (shape/dtype validated).
+
+    ``like`` may contain packed-resident optimizer states: the checkpoint
+    (always stored portable) is restored into their unpacked structure and
+    repacked, so the same file serves both backends."""
+    outer_leaves, outer_td = jax.tree_util.tree_flatten(
+        like, is_leaf=_is_packed)
+    if any(_is_packed(l) for l in outer_leaves):
+        portable_like = outer_td.unflatten(
+            [l.unpacked() if _is_packed(l) else l for l in outer_leaves])
+        restored, step = restore(path, portable_like)
+        slots = outer_td.flatten_up_to(restored)
+        return outer_td.unflatten(
+            [type(orig).from_unpacked(slot) if _is_packed(orig) else slot
+             for orig, slot in zip(outer_leaves, slots)]), step
     with open(path + ".json") as f:
         side = json.load(f)
     data = np.load(path)

@@ -1,15 +1,15 @@
 """Core: the paper's contribution — D-Adam / CD-Adam decentralized adaptive
 optimization with periodic + compressed gossip."""
-from repro.core.api import DecentralizedOptimizer, make_optimizer
-from repro.core.cdadam import CDAdamConfig, CDAdamState
+from repro.core.api import DecentralizedOptimizer, is_packed_state, make_optimizer
+from repro.core.cdadam import CDAdamConfig, CDAdamState, PackedCDAdamState
 from repro.core.compression import Compressor, make_compressor
-from repro.core.dadam import AdamMoments, DAdamConfig, DAdamState
+from repro.core.dadam import AdamMoments, DAdamConfig, DAdamState, PackedDAdamState
 from repro.core.topology import Topology, make_topology, spectral_gap
 
 __all__ = [
-    "DecentralizedOptimizer", "make_optimizer",
-    "DAdamConfig", "DAdamState", "AdamMoments",
-    "CDAdamConfig", "CDAdamState",
+    "DecentralizedOptimizer", "make_optimizer", "is_packed_state",
+    "DAdamConfig", "DAdamState", "PackedDAdamState", "AdamMoments",
+    "CDAdamConfig", "CDAdamState", "PackedCDAdamState",
     "Compressor", "make_compressor",
     "Topology", "make_topology", "spectral_gap",
 ]

@@ -7,6 +7,14 @@
 
 Everything is a pure function closed over static config — safe to jit,
 shard, scan and checkpoint.
+
+With ``backend='pallas'`` the state returned by ``opt.init`` is
+packed-resident (:class:`~repro.core.dadam.PackedDAdamState` /
+:class:`~repro.core.cdadam.PackedCDAdamState`): params and moments live in
+the stacked (K, rows, 128) kernel layout across steps and ``opt.step``
+accepts grads either as a congruent pytree or as an already packed buffer.
+``opt.params_of`` transparently materializes the unpacked pytree view at
+eval/logging boundaries for both backends.
 """
 from __future__ import annotations
 
@@ -16,12 +24,17 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 
 from repro.core import baselines, cdadam, dadam
-from repro.core.cdadam import CDAdamConfig
+from repro.core.cdadam import CDAdamConfig, PackedCDAdamState
 from repro.core.compression import Compressor, make_compressor
-from repro.core.dadam import DAdamConfig
+from repro.core.dadam import DAdamConfig, PackedDAdamState
 from repro.core.topology import Topology, make_topology
 
 PyTree = Any
+
+
+def is_packed_state(state: Any) -> bool:
+    """True for the packed-resident optimizer states of backend='pallas'."""
+    return isinstance(state, (PackedDAdamState, PackedCDAdamState))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,10 +57,18 @@ class DecentralizedOptimizer:
         'communication cost (MB)' x-axes)."""
         from repro.core.compression import tree_dense_bytes, tree_wire_bytes
 
-        leaves = jax.tree_util.tree_leaves(params)
         # strip the stacked worker dim for per-worker accounting
         per_worker = jax.tree_util.tree_map(lambda x: x[0], params)
-        deg = len(self.topo.offsets)
+        # Degree = the number of peers each worker actually exchanges with.
+        # The shift offsets only describe the roll lowering; when the
+        # runtime mixes densely (mixing='dense', or a topology with no
+        # shift structure) the offsets are empty/unused and the true degree
+        # comes from the weight matrix's off-diagonal support.
+        mixing = getattr(self.cfg, "mixing", "roll")
+        if self.topo.offsets and mixing != "dense":
+            deg = len(self.topo.offsets)
+        else:
+            deg = len(self.topo.neighbors_of(0))
         if self.compressor is None:
             return deg * tree_dense_bytes(per_worker)
         return deg * tree_wire_bytes(self.compressor, per_worker)

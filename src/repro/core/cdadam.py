@@ -21,11 +21,15 @@ from typing import Any, Callable, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dadam
 from repro.core.compression import Compressor
 from repro.core.dadam import AdamMoments, DAdamConfig, init_moments, local_update
 from repro.core.topology import Topology
+# light import only — the Pallas kernel stack (repro.kernels.ops) loads
+# lazily inside the pallas-only paths
+from repro.kernels import pack as packing
 
 PyTree = Any
 
@@ -45,6 +49,79 @@ class CDAdamState(NamedTuple):
     moments: AdamMoments
     hat_self: PyTree               # xhat^{(k)},         stacked (K, ...)
     hat_nbrs: Tuple[PyTree, ...]   # xhat^{((k+s)%K)} per topology offset s
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedCDAdamState:
+    """Resident packed CD-Adam state for ``backend='pallas'``.
+
+    Everything CHOCO-style state touches per step — params, both moments,
+    xhat_self and one xhat copy per topology offset — lives as stacked,
+    leaf-aligned ``(K, rows, 128)`` buffers across steps: the fused-Adam,
+    consensus-mix and sign-compress kernels consume them directly (zero
+    per-step pack/unpack; leaf-aligned row slices keep the compression
+    scale per (worker, leaf), exactly the reference semantics). Unpacked
+    pytree views (``.params`` / ``.moments`` / ``.hat_self`` /
+    ``.hat_nbrs``) materialize only at eval/checkpoint boundaries."""
+
+    __slots__ = ("buf", "m", "v", "count", "hat_buf", "hat_nbr_bufs",
+                 "spec", "spec_m")
+
+    def __init__(self, buf, m, v, count, hat_buf, hat_nbr_bufs, spec,
+                 spec_m):
+        self.buf, self.m, self.v, self.count = buf, m, v, count
+        self.hat_buf, self.hat_nbr_bufs = hat_buf, tuple(hat_nbr_bufs)
+        self.spec, self.spec_m = spec, spec_m
+
+    def tree_flatten(self):
+        return ((self.buf, self.m, self.v, self.count, self.hat_buf,
+                 self.hat_nbr_bufs), (self.spec, self.spec_m))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # ------- unpacked views: boundary use only (eval/log/checkpoint) -------
+
+    @property
+    def params(self) -> PyTree:
+        return packing.unpack(self.buf, self.spec)
+
+    @property
+    def moments(self) -> AdamMoments:
+        return AdamMoments(packing.unpack(self.m, self.spec_m),
+                           packing.unpack(self.v, self.spec_m), self.count)
+
+    @property
+    def hat_self(self) -> PyTree:
+        return packing.unpack(self.hat_buf, self.spec)
+
+    @property
+    def hat_nbrs(self) -> Tuple[PyTree, ...]:
+        return tuple(packing.unpack(h, self.spec)
+                     for h in self.hat_nbr_bufs)
+
+    def unpacked(self) -> CDAdamState:
+        """Portable NamedTuple state — the checkpoint wire format,
+        leaf-for-leaf identical to a reference-backend state."""
+        return CDAdamState(self.params, self.moments, self.hat_self,
+                           self.hat_nbrs)
+
+    @classmethod
+    def from_unpacked(cls, state: CDAdamState) -> "PackedCDAdamState":
+        spec = packing.make_spec(state.params, stacked=True,
+                                 block_rows=packing.BLOCK_ROWS,
+                                 leaf_align=True)
+        spec_m = packing.make_spec(state.moments.m, stacked=True,
+                                   block_rows=packing.BLOCK_ROWS,
+                                   leaf_align=True)
+        return cls(packing.pack(state.params, spec),
+                   packing.pack(state.moments.m, spec_m),
+                   packing.pack(state.moments.v, spec_m),
+                   state.moments.count,
+                   packing.pack(state.hat_self, spec),
+                   tuple(packing.pack(h, spec) for h in state.hat_nbrs),
+                   spec, spec_m)
 
 
 # --------------------- stacked encode/decode helpers -----------------------
@@ -87,7 +164,7 @@ def _roll_payload(payload: PyTree, shift: int) -> PyTree:
 
 
 def init(params_stacked: PyTree, cfg: CDAdamConfig,
-         topo: Topology) -> CDAdamState:
+         topo: Topology) -> "CDAdamState | PackedCDAdamState":
     cfg.validate()
     if not topo.offsets and topo.K > 1:
         raise ValueError("CD-Adam runtime requires a shift-invariant topology")
@@ -95,8 +172,11 @@ def init(params_stacked: PyTree, cfg: CDAdamConfig,
     # xhat_0 = 0 (CHOCO convention); neighbor copies likewise.
     hat_nbrs = tuple(jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
                      for _ in topo.offsets)
-    return CDAdamState(params_stacked, init_moments(params_stacked, cfg),
-                       zeros, hat_nbrs)
+    state = CDAdamState(params_stacked, init_moments(params_stacked, cfg),
+                        zeros, hat_nbrs)
+    if cfg.backend == "pallas":
+        return PackedCDAdamState.from_unpacked(state)
+    return state
 
 
 def _mix_with_hats(x_half: PyTree, hat_self: PyTree,
@@ -178,9 +258,81 @@ def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
     return CDAdamState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))
 
 
-def step(state: CDAdamState, grads: PyTree, topo: Topology,
-         cfg: CDAdamConfig, comp: Compressor) -> CDAdamState:
-    """One iteration of Alg. 2 (stacked mode)."""
+def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
+                       cfg: CDAdamConfig) -> PackedCDAdamState:
+    """Lines 8-11 of Alg. 2 entirely on resident packed buffers.
+
+    (8) is ONE fused consensus-mix kernel pass over the stacked buffer
+    (``kernels/gossip.py``). (9)+(11a) run the sign-compress kernel pair on
+    the *leaf-aligned row slices* of the resident buffers — compression
+    stays per (worker, leaf) with the true-element-count divisor, so the
+    math is bit-for-bit the reference semantics, with zero pack/unpack.
+    (10)+(11b) update the neighbor copies from the payload: the int8 q
+    buffer and the (K, L) per-leaf scales roll over the worker dim — still
+    exactly the compressed byte count on the wire when the dim is
+    sharded."""
+    from repro.kernels import ops
+
+    x_new = ops.consensus_mix(state_half.buf, state_half.hat_buf,
+                              state_half.hat_nbr_bufs, topo.offset_weights,
+                              cfg.gamma)
+
+    spec = state_half.spec
+    ranges = packing.leaf_row_ranges(spec)
+    q_parts, scale_cols, hat_parts = [], [], []
+    for (r0, r1), size in zip(ranges, spec.sizes):
+        q_l, s_l, h_l = ops.sign_compress_stacked(
+            x_new[:, r0:r1], state_half.hat_buf[:, r0:r1],
+            n_true=size if size else None)
+        q_parts.append(q_l)
+        scale_cols.append(s_l)
+        hat_parts.append(h_l)
+    q_buf = jnp.concatenate(q_parts, axis=1)                 # (K, rows, 128)
+    scales = jnp.stack(scale_cols, axis=1)                   # (K, L)
+    new_hat_buf = jnp.concatenate(hat_parts, axis=1)
+
+    # broadcast the per-(worker, leaf) scale over each leaf's row range
+    rows_per_leaf = np.array([r1 - r0 for r0, r1 in ranges])
+
+    def upd(hn, shift):
+        q_recv = jnp.roll(q_buf, -shift, axis=0)
+        sc_recv = jnp.roll(scales, -shift, axis=0)
+        sc_rows = jnp.repeat(sc_recv, rows_per_leaf, axis=1,
+                             total_repeat_length=spec.rows)   # (K, rows)
+        return hn + (sc_rows[:, :, None]
+                     * q_recv.astype(jnp.float32)).astype(hn.dtype)
+
+    new_hat_nbrs = tuple(upd(hn, s) for s, hn in
+                         zip(topo.offsets, state_half.hat_nbr_bufs))
+    return PackedCDAdamState(x_new, state_half.m, state_half.v,
+                             state_half.count, new_hat_buf, new_hat_nbrs,
+                             spec, state_half.spec_m)
+
+
+def _step_packed(state: PackedCDAdamState, grads: Any, topo: Topology,
+                 cfg: CDAdamConfig) -> PackedCDAdamState:
+    po, mo, vo, count = dadam._fused_local_packed(state, grads, cfg)
+    half = PackedCDAdamState(po, mo, vo, count, state.hat_buf,
+                             state.hat_nbr_bufs, state.spec, state.spec_m)
+    if topo.K == 1:
+        return half
+    comm = lambda s: _comm_round_packed(s, topo, cfg)
+    if cfg.period == 1:
+        return comm(half)
+    do_comm = (count % cfg.period) == 0
+    return jax.lax.cond(do_comm, comm, lambda s: s, half)
+
+
+def step(state: "CDAdamState | PackedCDAdamState", grads: PyTree,
+         topo: Topology, cfg: CDAdamConfig,
+         comp: Compressor) -> "CDAdamState | PackedCDAdamState":
+    """One iteration of Alg. 2 (stacked mode).
+
+    Packed-resident states (pallas backend) stay in the (K, rows, 128)
+    layout end to end; ``grads`` may be a congruent pytree (packed once at
+    this boundary) or an already packed buffer (zero pack/unpack)."""
+    if isinstance(state, PackedCDAdamState):
+        return _step_packed(state, grads, topo, cfg)
     half, mom = local_update(state.params, grads, state.moments, cfg)
     half_state = CDAdamState(half, mom, state.hat_self, state.hat_nbrs)
     if topo.K == 1:
@@ -195,11 +347,28 @@ def step(state: CDAdamState, grads: PyTree, topo: Topology,
     return jax.lax.cond(do_comm, comm, lambda s: s, half_state)
 
 
-def round_step(state: CDAdamState,
+def round_step(state: "CDAdamState | PackedCDAdamState",
                grad_fn: Callable[[PyTree, Any], PyTree],
                batches: Any, topo: Topology, cfg: CDAdamConfig,
-               comp: Compressor) -> CDAdamState:
-    """One communication round: p local Adam steps + one compressed gossip."""
+               comp: Compressor) -> "CDAdamState | PackedCDAdamState":
+    """One communication round: p local Adam steps + one compressed gossip.
+
+    For packed-resident states ``grad_fn`` receives the raw (K, rows, 128)
+    parameter buffer (differentiate through ``packing.unpack`` for the
+    zero-pack steady state; a returned pytree is packed at the boundary).
+    """
+    if isinstance(state, PackedCDAdamState):
+        def body_packed(carry: PackedCDAdamState, batch):
+            grads = grad_fn(carry.buf, batch)
+            po, mo, vo, count = dadam._fused_local_packed(carry, grads, cfg)
+            return PackedCDAdamState(po, mo, vo, count, carry.hat_buf,
+                                     carry.hat_nbr_bufs, carry.spec,
+                                     carry.spec_m), ()
+
+        inner, _ = jax.lax.scan(body_packed, state, batches)
+        if topo.K == 1:
+            return inner
+        return _comm_round_packed(inner, topo, cfg)
 
     def body(carry: CDAdamState, batch):
         grads = grad_fn(carry.params, batch)

@@ -34,6 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import Topology
+# the pack layer is dependency-light (no Pallas import); the kernel stack
+# itself (repro.kernels.ops) is imported lazily inside the pallas-only
+# paths so backend='reference' users never pay for it
+from repro.kernels import pack as packing
+from repro.kernels.pack import BLOCK_ROWS
 
 PyTree = Any
 
@@ -99,10 +104,14 @@ def _local_update_pallas(
     vector: the pytree is packed into a lane-aligned buffer (the update is
     elementwise, so worker/leaf boundaries are irrelevant), updated in VMEM
     tiles, and unpacked. Moments keep their own (possibly narrower) dtype
-    via a second spec over the same layout."""
+    via a second spec over the same layout.
+
+    This is the PR-1 *repack* path: it re-spends pack/unpack HBM traffic
+    every call. The steady-state pallas runtime keeps the state resident in
+    packed form instead (:class:`PackedDAdamState`); this path remains for
+    pytree-state callers (``local_update`` on raw trees) and as the
+    repack-vs-resident baseline in ``benchmarks/fused_step.py``."""
     from repro.kernels import ops
-    from repro.kernels import pack as packing
-    from repro.kernels.fused_adam import BLOCK_ROWS
 
     spec_p = packing.make_spec(params, block_rows=BLOCK_ROWS)
     spec_m = packing.make_spec(mom.m, block_rows=BLOCK_ROWS)
@@ -231,6 +240,32 @@ def gossip_axis(params: PyTree, topo: Topology, axis_name: str) -> PyTree:
     return jax.tree_util.tree_map(mix, params)
 
 
+# -------------------- packed-resident gossip (pallas) ----------------------
+
+
+def gossip_packed(buf: jax.Array, topo: Topology, cfg: DAdamConfig
+                  ) -> jax.Array:
+    """Gossip directly on the resident stacked (K, rows, LANE) buffer.
+
+    Shift-invariant graphs dispatch to the fused Pallas mixing kernel (one
+    VMEM pass, no rolled intermediates); dense/non-shift topologies — and
+    graphs too dense to keep every neighbor block in VMEM — fall back to
+    the mixing einsum over the worker dim of the buffer. Either way the
+    state never leaves the packed layout."""
+    from repro.kernels import ops
+    from repro.kernels.gossip import MAX_FUSED_DEGREE
+
+    if topo.K == 1:
+        return buf
+    if (cfg.mixing == "dense" or not topo.offsets
+            or len(topo.offsets) > MAX_FUSED_DEGREE):
+        W = jnp.asarray(topo.weights, jnp.float32)
+        return jnp.einsum("kj,jrc->krc", W,
+                          buf.astype(jnp.float32)).astype(buf.dtype)
+    return ops.gossip_mix(buf, topo.offsets, topo.offset_weights,
+                          topo.self_weight)
+
+
 # ------------------------------ state + step -------------------------------
 
 
@@ -239,19 +274,136 @@ class DAdamState(NamedTuple):
     moments: AdamMoments
 
 
-def init(params_stacked: PyTree, cfg: DAdamConfig) -> DAdamState:
+@jax.tree_util.register_pytree_node_class
+class PackedDAdamState:
+    """Resident packed D-Adam state for ``backend='pallas'``.
+
+    The stacked, leaf-aligned ``(K, rows, 128)`` buffer is the *persistent*
+    representation: params (``buf``) and both moments (``m``, ``v``) live
+    packed across steps, so the fused-Adam and gossip kernels consume and
+    produce it directly — zero per-step pack/unpack. Packing happens once
+    in :func:`init`; unpacked pytree views materialize only at boundaries
+    (``.params`` / ``.moments`` for eval, logging and checkpointing).
+
+    The :class:`~repro.kernels.pack.PackSpec` pair rides along as *static*
+    pytree aux_data, so the state jits/scans/conds like a NamedTuple while
+    the specs stay Python-side."""
+
+    __slots__ = ("buf", "m", "v", "count", "spec", "spec_m")
+
+    def __init__(self, buf, m, v, count, spec, spec_m):
+        self.buf, self.m, self.v, self.count = buf, m, v, count
+        self.spec, self.spec_m = spec, spec_m
+
+    def tree_flatten(self):
+        return ((self.buf, self.m, self.v, self.count),
+                (self.spec, self.spec_m))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # ------- unpacked views: boundary use only (eval/log/checkpoint) -------
+
+    @property
+    def params(self) -> PyTree:
+        return packing.unpack(self.buf, self.spec)
+
+    @property
+    def moments(self) -> AdamMoments:
+        return AdamMoments(packing.unpack(self.m, self.spec_m),
+                           packing.unpack(self.v, self.spec_m), self.count)
+
+    def unpacked(self) -> DAdamState:
+        """Portable (backend-agnostic) NamedTuple state — the checkpoint
+        wire format, identical leaf-for-leaf to a reference-backend state."""
+        return DAdamState(self.params, self.moments)
+
+    @classmethod
+    def from_unpacked(cls, state: DAdamState) -> "PackedDAdamState":
+        spec = packing.make_spec(state.params, stacked=True,
+                                 block_rows=BLOCK_ROWS, leaf_align=True)
+        spec_m = packing.make_spec(state.moments.m, stacked=True,
+                                   block_rows=BLOCK_ROWS, leaf_align=True)
+        return cls(packing.pack(state.params, spec),
+                   packing.pack(state.moments.m, spec_m),
+                   packing.pack(state.moments.v, spec_m),
+                   state.moments.count, spec, spec_m)
+
+
+def grads_buffer(grads: Any, spec: packing.PackSpec,
+                 dtype: Any) -> jax.Array:
+    """Admit gradients in either form at the step boundary: an already
+    packed ``(K, rows, 128)`` buffer passes through untouched (the
+    steady-state path — differentiate the loss through ``packing.unpack``
+    and AD's transpose delivers grads packed for free); a pytree —
+    including a bare array for single-leaf parameter trees — is packed
+    once here as a convenience."""
+    if isinstance(grads, jax.Array):
+        if tuple(grads.shape) == spec.buf_shape():
+            return grads.astype(dtype)
+        if len(spec.shapes) == 1 and tuple(grads.shape) == spec.shapes[0]:
+            # bare-array gradient of a single-leaf parameter tree
+            return packing.pack(grads, spec, dtype=dtype)
+        raise ValueError(
+            f"packed grads shape {tuple(grads.shape)} != resident "
+            f"buffer {spec.buf_shape()}")
+    return packing.pack(grads, spec, dtype=dtype)
+
+
+def init(params_stacked: PyTree, cfg: DAdamConfig
+         ) -> "DAdamState | PackedDAdamState":
     cfg.validate()
-    return DAdamState(params_stacked, init_moments(params_stacked, cfg))
+    state = DAdamState(params_stacked, init_moments(params_stacked, cfg))
+    if cfg.backend == "pallas":
+        return PackedDAdamState.from_unpacked(state)
+    return state
+
+
+def _fused_local_packed(state: PackedDAdamState, grads: Any,
+                        cfg: DAdamConfig
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array]:
+    """Alg. 1 lines 3-6 on resident buffers: one fused kernel pass, no
+    packing. Returns (params_buf, m_buf, v_buf, count)."""
+    from repro.kernels import ops
+
+    gbuf = grads_buffer(grads, state.spec, state.buf.dtype)
+    po, mo, vo = ops.fused_adam(
+        state.buf, gbuf, state.m, state.v,
+        eta=cfg.eta, beta1=cfg.beta1, beta2=cfg.beta2, tau=cfg.tau,
+        weight_decay=cfg.weight_decay)
+    return po, mo, vo, state.count + 1
+
+
+def _step_packed(state: PackedDAdamState, grads: Any, topo: Topology,
+                 cfg: DAdamConfig) -> PackedDAdamState:
+    po, mo, vo, count = _fused_local_packed(state, grads, cfg)
+    if cfg.period == 1:
+        buf = gossip_packed(po, topo, cfg)
+    else:
+        do_comm = (count % cfg.period) == 0
+        buf = jax.lax.cond(do_comm,
+                           lambda b: gossip_packed(b, topo, cfg),
+                           lambda b: b, po)
+    return PackedDAdamState(buf, mo, vo, count, state.spec, state.spec_m)
 
 
 def step(
-    state: DAdamState,
+    state: "DAdamState | PackedDAdamState",
     grads: PyTree,
     topo: Topology,
     cfg: DAdamConfig,
-) -> DAdamState:
+) -> "DAdamState | PackedDAdamState":
     """One iteration of Alg. 1 (stacked mode) with the communication-skip
-    condition evaluated in-graph (lax.cond keeps a single jitted step)."""
+    condition evaluated in-graph (lax.cond keeps a single jitted step).
+
+    Packed-resident states (pallas backend) never leave the (K, rows, 128)
+    layout: fused-Adam and the gossip kernel consume the buffers directly.
+    ``grads`` may be a congruent pytree (packed once at this boundary) or
+    an already packed buffer (zero pack/unpack)."""
+    if isinstance(state, PackedDAdamState):
+        return _step_packed(state, grads, topo, cfg)
     half, mom = local_update(state.params, grads, state.moments, cfg)
     if cfg.period == 1:
         return DAdamState(gossip_stacked(half, topo, cfg), mom)
@@ -265,18 +417,34 @@ def step(
 
 
 def round_step(
-    state: DAdamState,
+    state: "DAdamState | PackedDAdamState",
     grad_fn: Callable[[PyTree, Any], PyTree],
     batches: Any,  # pytree with leading dim p (one microbatch per local step)
     topo: Topology,
     cfg: DAdamConfig,
-) -> DAdamState:
+) -> "DAdamState | PackedDAdamState":
     """One *communication round* = p local steps (lax.scan) + one gossip.
 
     This is the unit the launcher lowers for the dry-run: the compiled HLO
     contains exactly one gossip exchange per p local Adam steps, so the
     roofline's collective bytes reflect the paper's skipping schedule.
+
+    For packed-resident states ``grad_fn`` receives the raw (K, rows, 128)
+    parameter buffer and may return grads as a congruent buffer (the
+    zero-pack steady state: differentiate the loss through
+    ``packing.unpack``) or as a pytree (packed at the boundary).
     """
+    if isinstance(state, PackedDAdamState):
+        def body_packed(carry: PackedDAdamState, batch):
+            grads = grad_fn(carry.buf, batch)
+            po, mo, vo, count = _fused_local_packed(carry, grads, cfg)
+            return PackedDAdamState(po, mo, vo, count, carry.spec,
+                                    carry.spec_m), ()
+
+        inner, _ = jax.lax.scan(body_packed, state, batches)
+        return PackedDAdamState(gossip_packed(inner.buf, topo, cfg),
+                                inner.m, inner.v, inner.count,
+                                state.spec, state.spec_m)
 
     def body(carry: DAdamState, batch):
         grads = grad_fn(carry.params, batch)

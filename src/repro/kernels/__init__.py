@@ -2,12 +2,29 @@
 
   fused_adam      — the paper's per-worker adaptive update, one VMEM pass
   sign_compress   — CD-Adam's error-feedback compression + int8 payload
+  gossip          — shift-invariant mixing + CD-Adam consensus update over
+                    the resident packed (K, rows, 128) optimizer state
   flash_attention — prefill/train attention (VMEM-resident online softmax)
   rwkv_scan       — RWKV6 WKV recurrence (state resident in VMEM)
 
-ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the pure
-jnp oracles the tests pin each kernel against.
+pack.py is the pytree <-> (rows, 128) bridge; with backend='pallas' the
+packed buffer is the *persistent* optimizer state (pack once at init,
+unpack only at eval/checkpoint boundaries), so every kernel above composes
+on the same resident layout. ops.py holds the jit'd wrappers
+(interpret=True on CPU); ref.py the pure jnp oracles the tests pin each
+kernel against.
 """
-from repro.kernels import ops, ref
+import importlib
+from typing import Any
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "pack", "ref"]
+
+
+def __getattr__(name: str) -> Any:
+    # Lazy submodule access (PEP 562): `repro.kernels.ops` etc. resolve on
+    # first touch, so importing the pack layer — or repro.core for the
+    # reference backend — does not pull the whole Pallas kernel stack.
+    if name in ("ops", "ref", "pack", "fused_adam", "sign_compress",
+                "gossip", "flash_attention", "rwkv_scan"):
+        return importlib.import_module(f"repro.kernels.{name}")
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")

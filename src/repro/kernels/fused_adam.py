@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128
-BLOCK_ROWS = 256  # (256, 128) f32 tile = 128 KiB/operand; 7 operands < 1 MiB
+from repro.kernels.pack import BLOCK_ROWS, LANE  # shared tile quantum:
+# (256, 128) f32 tile = 128 KiB/operand; 7 operands < 1 MiB, and the
+# resident packed layout is aligned to it (zero re-padding here)
 
 
 def _adam_kernel(p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *,

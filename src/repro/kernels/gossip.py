@@ -1,0 +1,140 @@
+"""Gossip mixing over the resident packed optimizer state, as Pallas
+kernels.
+
+Both kernels operate on the stacked packed (K, rows, LANE) buffer that is
+the persistent representation of ``backend='pallas'`` optimizer state —
+no per-step pack/unpack, no per-leaf tree_map launches:
+
+``gossip_mix``
+    D-Adam's shift-invariant mixing  out[k] = w_self * x[k] +
+    sum_s w_s * x[(k + s) % K].  The reference path materializes one full
+    rolled copy of the parameter stack per offset (deg extra HBM
+    round-trips for the intermediates); here every grid step accumulates
+    all neighbor blocks in VMEM and writes the mixed block ONCE. The
+    neighbor blocks are expressed as extra input BlockSpecs over the SAME
+    buffer whose index maps shift the worker coordinate by the (static)
+    topology offset — the Pallas pipeline turns each into exactly the
+    neighbor-block DMA the ring actually needs.
+
+``consensus_mix``
+    CD-Adam's consensus update  out[k] = x[k] + gamma * sum_s w_s *
+    (hat_s[k] - hat_self[k])  (Alg. 2 line 8) — a (deg + 2)-operand
+    elementwise pass, fused into a single VMEM visit per block.
+
+Hyperparameters (offsets, weights, gamma) are compile-time constants: the
+optimizer jits one step per config, matching fused_adam / sign_compress.
+Zero-filled padding rows mix to zero under both kernels (all-zero inputs
+=> zero output), so resident buffer padding stays zero across steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pack import BLOCK_ROWS, LANE  # shared tile quantum
+
+# VMEM is ~16 MiB/core; cap the operand count so (deg + 2) blocks of
+# 128 KiB (plus pipeline double-buffering) stay comfortably inside it.
+# Denser graphs fall back to the XLA einsum path in the dispatcher.
+MAX_FUSED_DEGREE = 32
+
+
+def _check_buf(x: jax.Array, block_rows: int) -> Tuple[int, int]:
+    if x.ndim != 3 or x.shape[-1] != LANE:
+        raise ValueError(f"expected a stacked (K, rows, {LANE}) packed "
+                         f"buffer; got shape {x.shape}")
+    K, rows = x.shape[0], x.shape[1]
+    if rows % block_rows:
+        raise ValueError(f"rows={rows} not a multiple of block_rows="
+                         f"{block_rows}; pack with block_rows={block_rows}")
+    return K, rows
+
+
+def _mix_kernel(*refs, self_weight: float, weights: Tuple[float, ...]):
+    ins, out_ref = refs[:-1], refs[-1]
+    acc = self_weight * ins[0][...].astype(jnp.float32)
+    for w, r in zip(weights, ins[1:]):
+        acc = acc + w * r[...].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def gossip_mix(x: jax.Array, offsets: Sequence[int],
+               offset_weights: Sequence[float], self_weight: float, *,
+               block_rows: int = BLOCK_ROWS,
+               interpret: bool = False) -> jax.Array:
+    """Shift-invariant gossip over a stacked packed buffer, one VMEM pass.
+
+    ``x`` is (K, rows, LANE); row-block i of output worker k reads row-block
+    i of workers k and (k + s) % K for each static offset s.
+    """
+    K, rows = _check_buf(x, block_rows)
+    offsets = tuple(int(s) for s in offsets)
+    weights = tuple(float(w) for w in offset_weights)
+    if len(offsets) != len(weights):
+        raise ValueError("offsets and offset_weights must align")
+    if not offsets:
+        return x
+
+    def spec_for(shift: int) -> pl.BlockSpec:
+        return pl.BlockSpec((1, block_rows, LANE),
+                            lambda k, i, s=shift: ((k + s) % K, i, 0))
+
+    kernel = functools.partial(_mix_kernel, self_weight=float(self_weight),
+                               weights=weights)
+    return pl.pallas_call(
+        kernel,
+        grid=(K, rows // block_rows),
+        in_specs=[spec_for(0)] + [spec_for(s) for s in offsets],
+        out_specs=spec_for(0),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, *([x] * len(offsets)))
+
+
+def _consensus_kernel(*refs, gamma: float, weights: Tuple[float, ...]):
+    x_ref, hs_ref = refs[0], refs[1]
+    hn_refs, out_ref = refs[2:-1], refs[-1]
+    hs = hs_ref[...].astype(jnp.float32)
+    acc = jnp.zeros_like(hs)
+    for w, hn in zip(weights, hn_refs):
+        acc = acc + w * (hn[...].astype(jnp.float32) - hs)
+    out_ref[...] = (x_ref[...].astype(jnp.float32)
+                    + gamma * acc).astype(out_ref.dtype)
+
+
+def consensus_mix(x: jax.Array, hat_self: jax.Array,
+                  hat_nbrs: Sequence[jax.Array],
+                  offset_weights: Sequence[float], gamma: float, *,
+                  block_rows: int = BLOCK_ROWS,
+                  interpret: bool = False) -> jax.Array:
+    """CD-Adam consensus update on resident packed buffers, one VMEM pass.
+
+    All operands are (K, rows, LANE); no communication happens here — the
+    neighbor xhat copies are CHOCO-style local state.
+    """
+    K, rows = _check_buf(x, block_rows)
+    hat_nbrs = tuple(hat_nbrs)
+    weights = tuple(float(w) for w in offset_weights)
+    if len(hat_nbrs) != len(weights):
+        raise ValueError("hat_nbrs and offset_weights must align")
+    for h in (hat_self,) + hat_nbrs:
+        if h.shape != x.shape:
+            raise ValueError(f"hat buffer shape {h.shape} != x {x.shape}")
+    if not hat_nbrs:
+        return x
+
+    spec = pl.BlockSpec((1, block_rows, LANE), lambda k, i: (k, i, 0))
+    kernel = functools.partial(_consensus_kernel, gamma=float(gamma),
+                               weights=weights)
+    return pl.pallas_call(
+        kernel,
+        grid=(K, rows // block_rows),
+        in_specs=[spec] * (2 + len(hat_nbrs)),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, hat_self, *hat_nbrs)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_adam as _adam
+from repro.kernels import gossip as _gossip
 from repro.kernels import rwkv_scan as _wkv
 from repro.kernels import sign_compress as _sc
 
@@ -37,8 +38,26 @@ def sign_compress(x, hat, *, interpret: Optional[bool] = None):
     return _sc.sign_compress(x, hat, interpret=_interpret(interpret))
 
 
-def sign_compress_stacked(x, hat, *, interpret: Optional[bool] = None):
-    return _sc.sign_compress_stacked(x, hat, interpret=_interpret(interpret))
+def sign_compress_stacked(x, hat, *, n_true: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    return _sc.sign_compress_stacked(x, hat, n_true=n_true,
+                                     interpret=_interpret(interpret))
+
+
+def gossip_mix(x, offsets, offset_weights, self_weight, *,
+               block_rows: Optional[int] = None,
+               interpret: Optional[bool] = None):
+    kw = {} if block_rows is None else {"block_rows": block_rows}
+    return _gossip.gossip_mix(x, offsets, offset_weights, self_weight,
+                              interpret=_interpret(interpret), **kw)
+
+
+def consensus_mix(x, hat_self, hat_nbrs, offset_weights, gamma, *,
+                  block_rows: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    kw = {} if block_rows is None else {"block_rows": block_rows}
+    return _gossip.consensus_mix(x, hat_self, hat_nbrs, offset_weights,
+                                 gamma, interpret=_interpret(interpret), **kw)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,

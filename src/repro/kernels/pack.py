@@ -6,7 +6,7 @@ the bridge: a ``PackSpec`` captures the leaf layout of a tree once, and
 ``pack`` / ``unpack`` move congruent trees in and out of a single flat
 buffer.
 
-Two layouts:
+Three layouts:
 
 * **flat** (``make_spec(tree)``): every element of every leaf — including a
   stacked worker dim — is concatenated into one (rows, LANE) buffer, so the
@@ -16,22 +16,27 @@ Two layouts:
 * **stacked** (``make_spec(tree, stacked=True)``): the leading worker dim K
   is preserved; per-worker contents are concatenated and padded to a
   (K, rows, LANE) buffer whose row k holds exactly worker k's elements.
+* **stacked + leaf-aligned** (``make_spec(tree, stacked=True,
+  leaf_align=True)``): additionally every leaf segment is padded up to
+  whole (block_rows, LANE) tiles, so each leaf occupies a contiguous,
+  tile-aligned row range of the buffer (``leaf_row_ranges``). This is the
+  *resident* layout of the packed optimizer states: per-(worker, leaf)
+  kernels — e.g. CD-Adam's sign compression, whose reference semantics put
+  one scale per (worker, leaf) — run directly on buffer *slices*, with no
+  per-step pack/unpack and no coarsening of the per-leaf math.
 
-  NOTE: CD-Adam's pallas comm round does NOT pack — it launches
-  ``sign_compress_stacked`` per leaf, because the reference semantics put
-  one compression scale per (worker, leaf) and whole-tree packing would
-  coarsen that to one scale per worker (different math, no parity). The
-  stacked layout is for worker-dim-preserving buffer transport (e.g. a
-  future whole-vector compressor that deliberately opts into per-worker
-  scales).
-
-Padding is to whole (block_rows, LANE) tiles so the kernels never re-pad.
+Padding is to whole (block_rows, LANE) tiles so the kernels never re-pad,
+and is zero-filled — the optimizer kernels preserve zeros in padding, so a
+resident buffer's padding stays zero across arbitrarily many steps.
 Mixed-dtype trees are packed in the widest participating float dtype
 (``jnp.result_type``) and cast back per leaf on unpack, which is lossless
 for the bf16-in-f32 case; the pack/unpack pair is an exact inverse.
+Integer-dtype leaves are rejected outright: packing them through the float
+buffer would silently corrupt them in the kernels' ``sqrt``/``sign`` math.
 
 All sizes in the spec are Python ints — specs are hashable static data,
-safe to close over in jitted functions.
+safe to close over in jitted functions and to carry as static aux_data of
+a registered pytree (how the packed optimizer states hold them).
 """
 from __future__ import annotations
 
@@ -44,6 +49,10 @@ import numpy as np
 PyTree = Any
 
 LANE = 128
+# Shared VMEM tile quantum: (BLOCK_ROWS, LANE) f32 = 128 KiB/operand. The
+# resident packed layout aligns to it so fused_adam / gossip /
+# sign_compress (which import it from here) never re-pad a buffer.
+BLOCK_ROWS = 256
 
 
 class PackSpec(NamedTuple):
@@ -51,6 +60,8 @@ class PackSpec(NamedTuple):
     shapes: Tuple[Tuple[int, ...], ...]   # full leaf shapes (incl. K if stacked)
     dtypes: Tuple[Any, ...]
     sizes: Tuple[int, ...]                # per-(worker-)leaf element counts
+    offsets: Tuple[int, ...]              # per-leaf start offset in the
+    #                                       padded flat (per-worker) buffer
     n: int                                # true elements per worker (sum sizes)
     rows: int                             # padded row count: rows*LANE >= n
     k: Optional[int]                      # worker count; None in flat mode
@@ -63,17 +74,41 @@ class PackSpec(NamedTuple):
     def padded(self) -> int:
         return self.rows * LANE
 
+    @property
+    def leaf_aligned(self) -> bool:
+        """True when every leaf segment starts on a LANE boundary (the
+        leaf_align layout), i.e. per-leaf buffer slices are row ranges."""
+        return all(o % LANE == 0 for o in self.offsets) and \
+            self.padded % LANE == 0
+
+    def buf_shape(self) -> Tuple[int, ...]:
+        return ((self.k, self.rows, LANE) if self.stacked
+                else (self.rows, LANE))
+
+
+def _require_float(dtypes, what: str) -> None:
+    for dt in dtypes:
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise ValueError(
+                f"{what} requires float leaves; got dtype {dt} — packing "
+                "integer data through the float buffer would corrupt it in "
+                "the kernels' sqrt/sign math (cast it explicitly first, or "
+                "keep it out of the packed tree)")
+
 
 def make_spec(tree: PyTree, *, stacked: bool = False,
-              block_rows: int = 1) -> PackSpec:
+              block_rows: int = 1, leaf_align: bool = False) -> PackSpec:
     """Record the layout of ``tree``; pad up to whole (block_rows, LANE)
-    tiles. Any tree congruent with ``tree`` (same treedef + leaf shapes) can
-    then be packed against this spec, regardless of leaf dtypes."""
+    tiles. With ``leaf_align`` every *leaf segment* is padded to whole
+    tiles, so each leaf occupies a contiguous tile-aligned row range. Any
+    tree congruent with ``tree`` (same treedef + leaf shapes) can then be
+    packed against this spec, regardless of (float) leaf dtypes."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         raise ValueError("cannot pack an empty pytree")
     shapes = tuple(tuple(l.shape) for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    _require_float(dtypes, "pack()")
     k: Optional[int] = None
     if stacked:
         ks = {s[0] if s else None for s in shapes}
@@ -84,11 +119,28 @@ def make_spec(tree: PyTree, *, stacked: bool = False,
         sizes = tuple(int(np.prod(s[1:], dtype=np.int64)) for s in shapes)
     else:
         sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
-    n = sum(sizes)
     per_tile = block_rows * LANE
-    padded = n + (-n) % per_tile
+    if leaf_align:
+        seg = tuple(sz + (-sz) % per_tile for sz in sizes)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + seg)[:-1])
+        padded = int(sum(seg))
+    else:
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+        n_true = sum(sizes)
+        padded = n_true + (-n_true) % per_tile
     return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
-                    sizes=sizes, n=n, rows=padded // LANE, k=k)
+                    sizes=sizes, offsets=offsets, n=sum(sizes),
+                    rows=padded // LANE, k=k)
+
+
+def leaf_row_ranges(spec: PackSpec) -> Tuple[Tuple[int, int], ...]:
+    """Per-leaf (row_start, row_end) within the buffer. Requires the
+    leaf-aligned layout (each segment a whole number of rows)."""
+    if not spec.leaf_aligned:
+        raise ValueError("leaf_row_ranges needs a leaf_align=True spec")
+    ends = spec.offsets[1:] + (spec.padded,)
+    return tuple((o // LANE, e // LANE)
+                 for o, e in zip(spec.offsets, ends))
 
 
 def _check_congruent(leaves, spec: PackSpec) -> None:
@@ -97,43 +149,54 @@ def _check_congruent(leaves, spec: PackSpec) -> None:
         raise ValueError(f"tree does not match spec: {got} vs {spec.shapes}")
 
 
+def _segment_pads(spec: PackSpec) -> Tuple[int, ...]:
+    """Zero-fill element count after each leaf's true data."""
+    ends = spec.offsets[1:] + (spec.padded,)
+    return tuple(e - o - sz
+                 for o, e, sz in zip(spec.offsets, ends, spec.sizes))
+
+
 def pack(tree: PyTree, spec: PackSpec, dtype: Any = None) -> jax.Array:
     """Flatten ``tree`` into a (rows, LANE) — or (K, rows, LANE) — buffer.
 
     ``dtype`` defaults to the widest dtype among the leaves; padding is
-    zeros (the kernels' reductions are pad-safe for zero fill)."""
+    zeros (the kernels' reductions are pad-safe for zero fill, and the
+    optimizer kernels map zeros to zeros so resident padding stays zero)."""
     leaves = jax.tree_util.tree_leaves(tree)
     _check_congruent(leaves, spec)
+    _require_float([l.dtype for l in leaves], "pack()")
     dt = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*leaves)
+    pads = _segment_pads(spec)
     if spec.stacked:
-        parts = [l.reshape(spec.k, -1).astype(dt) for l in leaves]
+        parts = []
+        for l, pad in zip(leaves, pads):
+            flat = l.reshape(spec.k, -1).astype(dt)
+            parts.append(jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat)
         flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
-        if spec.padded != spec.n:
-            flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.n)))
         return flat.reshape(spec.k, spec.rows, LANE)
-    parts = [l.reshape(-1).astype(dt) for l in leaves]
+    parts = []
+    for l, pad in zip(leaves, pads):
+        flat = l.reshape(-1).astype(dt)
+        parts.append(jnp.pad(flat, (0, pad)) if pad else flat)
     flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-    if spec.padded != spec.n:
-        flat = jnp.pad(flat, (0, spec.padded - spec.n))
     return flat.reshape(spec.rows, LANE)
 
 
 def unpack(buf: jax.Array, spec: PackSpec) -> PyTree:
     """Exact inverse of ``pack``: strip padding, split, restore per-leaf
     shape and dtype."""
-    offsets = np.cumsum((0,) + spec.sizes)[:-1]
     if spec.stacked:
         flat = buf.reshape(spec.k, -1)
         leaves = [
             flat[:, o:o + sz].astype(dt).reshape(shape)
-            for o, sz, dt, shape in zip(offsets, spec.sizes, spec.dtypes,
-                                        spec.shapes)
+            for o, sz, dt, shape in zip(spec.offsets, spec.sizes,
+                                        spec.dtypes, spec.shapes)
         ]
     else:
         flat = buf.reshape(-1)
         leaves = [
             flat[o:o + sz].astype(dt).reshape(shape)
-            for o, sz, dt, shape in zip(offsets, spec.sizes, spec.dtypes,
-                                        spec.shapes)
+            for o, sz, dt, shape in zip(spec.offsets, spec.sizes,
+                                        spec.dtypes, spec.shapes)
         ]
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)

@@ -21,15 +21,14 @@ vmap-per-worker semantics of the reference CD-Adam encode path.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-LANE = 128
-BLOCK_ROWS = 256
+from repro.kernels.pack import BLOCK_ROWS, LANE
 
 
 def _absmean_kernel(x_ref, h_ref, out_ref):
@@ -119,6 +118,7 @@ def _apply_stacked_kernel(x_ref, h_ref, scale_ref, q_ref, ho_ref):
 
 
 def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
+                          n_true: Optional[int] = None,
                           block_rows: int = BLOCK_ROWS,
                           interpret: bool = False
                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -127,7 +127,13 @@ def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
     Returns (q int8 [x.shape], scale f32 [K], hat_new [hat.dtype]); row k
     of every output depends only on row k of the inputs — identical to
     vmapping :func:`sign_compress` over the worker dim, but lowered as one
-    (K, blocks)-grid kernel pair so the worker dim can stay sharded."""
+    (K, blocks)-grid kernel pair so the worker dim can stay sharded.
+
+    ``n_true`` overrides the scale divisor (mean |delta| denominator) when
+    ``x`` is a zero-padded slice of a resident packed buffer: the padding
+    contributes 0 to the |delta| sum but must not inflate the element
+    count, or the per-leaf scale would diverge from the reference
+    compressor's mean over the leaf's true elements."""
     if x.ndim < 1:
         raise ValueError("stacked sign compress needs a leading worker dim")
     K = x.shape[0]
@@ -136,6 +142,10 @@ def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
         #         is a no-op on empties too; avoid a 0-row pallas grid)
         return (jnp.zeros(x.shape, jnp.int8), jnp.zeros((K,), jnp.float32),
                 hat)
+    if n_true is None:
+        n_true = n
+    if not 0 < n_true <= n:
+        raise ValueError(f"n_true={n_true} out of range (0, {n}]")
     per_block = block_rows * LANE
     n_pad = (-n) % per_block
 
@@ -160,7 +170,7 @@ def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
     )(xx, hh)
     # padded entries are x=0, hat=0 -> contribute 0; divide by the true
     # per-worker element count.
-    scale = jnp.sum(partials, axis=1) / n
+    scale = jnp.sum(partials, axis=1) / n_true
     scale2d = scale.reshape(K, 1)
 
     q, hat_new = pl.pallas_call(

@@ -85,6 +85,17 @@ def main() -> None:
           f"N={n_params/1e6:.1f}M x {args.workers} workers "
           f"opt={args.optimizer} p={args.period} "
           f"topo={args.topology} backend={args.backend}")
+    if args.backend == "pallas":
+        # packed-resident state: params + moments live in the stacked
+        # (K, rows, 128) kernel layout across steps; grads are produced
+        # packed by differentiating through the unpack view, and
+        # checkpoints are stored in the portable (backend-agnostic) form.
+        spec = state.spec
+        print(f"[train] resident packed state: K={spec.k} "
+              f"rows={spec.rows} ({spec.rows * 128 / 1e6:.2f}M slots/"
+              f"worker, {spec.n / 1e6:.2f}M live; "
+              f"{(spec.rows * 128 - spec.n) / max(spec.rows * 128, 1):.1%} "
+              f"tile padding)")
 
     it = make_batch_iter(cfg, args.workers, args.batch, args.seq, args.skew)
     t0 = time.perf_counter()

@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DecentralizedOptimizer, make_optimizer
+from repro.core import DecentralizedOptimizer, is_packed_state, make_optimizer
 from repro.core.dadam import consensus_error, mean_params
+from repro.kernels import pack as packing
 
 PyTree = Any
 
@@ -60,6 +61,24 @@ class DecentralizedTrainer:
         self._grad = jax.vmap(jax.value_and_grad(loss_fn))
 
         def step(state, batch):
+            if is_packed_state(state):
+                # Packed-resident state (pallas backend): differentiate the
+                # per-worker losses THROUGH packing.unpack, w.r.t. the
+                # resident (K, rows, 128) buffer. AD's transpose of unpack
+                # deposits each worker's grads straight into its buffer
+                # slice — the grads arrive packed with zero explicit
+                # pack/unpack in the step, and the optimizer update runs
+                # entirely on resident buffers.
+                spec = state.spec
+
+                def stacked_loss(buf):
+                    losses = jax.vmap(self.loss_fn)(
+                        packing.unpack(buf, spec), batch)
+                    return jnp.sum(losses), losses
+
+                (_, losses), gbuf = jax.value_and_grad(
+                    stacked_loss, has_aux=True)(state.buf)
+                return self.opt.step(state, gbuf), jnp.mean(losses)
             losses, grads = self._grad(self.opt.params_of(state), batch)
             return self.opt.step(state, grads), jnp.mean(losses)
 

@@ -97,6 +97,45 @@ class TestPack:
         with pytest.raises(ValueError):
             packing.make_spec({})
 
+    def test_int_tree_rejected(self):
+        """Integer leaves must not silently pack through the float buffer
+        (sqrt/sign on bit-reinterpreted ints would be garbage)."""
+        with pytest.raises(ValueError, match="float"):
+            packing.make_spec({"ids": jnp.arange(8, dtype=jnp.int32)})
+
+    def test_mixed_int_tree_rejected(self):
+        tree = {"w": jnp.ones((4, 4), jnp.float32),
+                "ids": jnp.arange(8, dtype=jnp.int32)}
+        with pytest.raises(ValueError, match="float"):
+            packing.make_spec(tree)
+        # an int tree packed against a float spec is rejected too
+        spec = packing.make_spec({"w": jnp.ones((4, 4), jnp.float32),
+                                  "ids": jnp.ones((8,), jnp.float32)})
+        with pytest.raises(ValueError, match="float"):
+            packing.pack(tree, spec)
+
+    def test_bool_tree_rejected(self):
+        with pytest.raises(ValueError, match="float"):
+            packing.make_spec({"mask": jnp.ones((4,), bool)})
+
+    @pytest.mark.parametrize("stacked", [False, True])
+    def test_leaf_aligned_inverse_and_row_ranges(self, stacked):
+        K = 3 if stacked else None
+        tree = ragged_tree(KEY, K=K)
+        spec = packing.make_spec(tree, stacked=stacked, block_rows=8,
+                                 leaf_align=True)
+        buf = packing.pack(tree, spec)
+        assert_trees_close(packing.unpack(buf, spec), tree, rtol=0, atol=0)
+        ranges = packing.leaf_row_ranges(spec)
+        assert ranges[0][0] == 0 and ranges[-1][1] == spec.rows
+        for (r0, r1), sz in zip(ranges, spec.sizes):
+            assert (r1 - r0) % 8 == 0  # whole (block_rows, LANE) tiles
+            assert (r1 - r0) * packing.LANE >= sz
+        # non-aligned specs refuse to hand out row ranges
+        flat_spec = packing.make_spec(tree, stacked=stacked, block_rows=8)
+        with pytest.raises(ValueError, match="leaf_align"):
+            packing.leaf_row_ranges(flat_spec)
+
 
 # ------------------------------ fused Adam ---------------------------------
 
@@ -258,6 +297,18 @@ class TestInvariantsUnderBothBackends:
                                    np.asarray(ref_p["x"]),
                                    rtol=1e-5, atol=1e-6)
 
+    @staticmethod
+    def _round_grad_fn(state, centers):
+        """grad of sum_k ||x_k - c_k||^2, in the form round_step hands out:
+        a pytree for NamedTuple states, the resident packed buffer for
+        packed states (where the elementwise grad applies to the buffer
+        directly — centers packed once, user-side)."""
+        if hasattr(state, "spec"):
+            centers_buf = packing.pack({"x": centers}, state.spec)
+            return lambda buf, batch: 2.0 * (buf - centers_buf)
+        return lambda params, batch: {
+            "x": 2.0 * (params["x"] - centers) + 0.0 * batch}
+
     @pytest.mark.parametrize("backend", ["reference", "pallas"])
     def test_dadam_round_equals_p_steps(self, backend):
         K, d, p = 4, 6, 3
@@ -266,14 +317,13 @@ class TestInvariantsUnderBothBackends:
         centers = jax.random.normal(KEY, (K, d))
         batches = jax.random.normal(jax.random.fold_in(KEY, 2), (p, K, d))
 
-        def grad_fn(params, batch):
-            return {"x": 2.0 * (params["x"] - centers) + 0.0 * batch}
-
         s1 = dadam.init({"x": jnp.zeros((K, d))}, cfg)
-        s1 = dadam.round_step(s1, grad_fn, batches, topo, cfg)
+        s1 = dadam.round_step(s1, self._round_grad_fn(s1, centers), batches,
+                              topo, cfg)
         s2 = dadam.init({"x": jnp.zeros((K, d))}, cfg)
         for t in range(p):
-            s2 = dadam.step(s2, grad_fn(s2.params, batches[t]), topo, cfg)
+            g = {"x": 2.0 * (s2.params["x"] - centers)}
+            s2 = dadam.step(s2, g, topo, cfg)
         np.testing.assert_allclose(np.asarray(s1.params["x"]),
                                    np.asarray(s2.params["x"]),
                                    rtol=1e-5, atol=1e-6)
@@ -288,15 +338,13 @@ class TestInvariantsUnderBothBackends:
         centers = jax.random.normal(KEY, (K, d))
         batches = jax.random.normal(jax.random.fold_in(KEY, 2), (p, K, d))
 
-        def grad_fn(params, batch):
-            return {"x": 2.0 * (params["x"] - centers) + 0.0 * batch}
-
         s1 = cdadam.init({"x": jnp.zeros((K, d))}, cfg, topo)
-        s1 = cdadam.round_step(s1, grad_fn, batches, topo, cfg, comp)
+        s1 = cdadam.round_step(s1, self._round_grad_fn(s1, centers), batches,
+                               topo, cfg, comp)
         s2 = cdadam.init({"x": jnp.zeros((K, d))}, cfg, topo)
         for t in range(p):
-            s2 = cdadam.step(s2, grad_fn(s2.params, batches[t]), topo, cfg,
-                             comp)
+            g = {"x": 2.0 * (s2.params["x"] - centers)}
+            s2 = cdadam.step(s2, g, topo, cfg, comp)
         np.testing.assert_allclose(np.asarray(s1.params["x"]),
                                    np.asarray(s2.params["x"]),
                                    rtol=1e-5, atol=1e-6)

@@ -1,0 +1,377 @@
+"""Packed-resident optimizer state (backend='pallas') invariants.
+
+Pins the acceptance criteria of the resident-layout refactor:
+
+* ``step`` / ``round_step`` on packed states perform ZERO ``pack`` /
+  ``unpack`` calls in steady state (counted via monkeypatch on the
+  un-jitted step, so even trace-time calls are caught) — packing happens
+  once in ``init``; unpacking only at ``params_of`` / checkpoint / eval
+  boundaries,
+* the ``kernels/gossip.py`` Pallas kernels match the reference roll
+  mixing and CD-Adam consensus update,
+* buffer padding stays exactly zero across steps (the resident-layout
+  soundness invariant),
+* checkpoints are backend-portable: save under 'pallas', restore under
+  'reference' (and back) bit-identically, incl. bfloat16 moments and the
+  tuple-of-pytrees ``hat_nbrs``,
+* ``comm_bytes_per_round`` counts true graph degree for dense/non-shift
+  topologies (regression: it returned 0),
+* the trainer's differentiate-through-unpack grad path matches the
+  reference backend end to end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.core import (cdadam, dadam, is_packed_state, make_optimizer,
+                        make_topology)
+from repro.core.cdadam import CDAdamConfig, PackedCDAdamState
+from repro.core.dadam import DAdamConfig, PackedDAdamState, gossip_roll
+from repro.kernels import ops
+from repro.kernels import pack as packing
+
+KEY = jax.random.PRNGKey(0)
+
+
+def ragged_tree(key, K, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(ks[0], (K, 13, 7), dtype),
+        "b": jax.random.normal(ks[1], (K, 5), dtype),
+        "nest": {"u": jax.random.normal(ks[2], (K, 3, 11, 2), dtype)},
+    }
+
+
+def assert_trees_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+# -------------------- zero pack/unpack in steady state ----------------------
+
+
+class _PackCounter:
+    """Monkeypatch harness counting packing.pack / packing.unpack calls."""
+
+    def __init__(self, monkeypatch):
+        self.calls = {"pack": 0, "unpack": 0}
+        orig_pack, orig_unpack = packing.pack, packing.unpack
+
+        def count_pack(*a, **k):
+            self.calls["pack"] += 1
+            return orig_pack(*a, **k)
+
+        def count_unpack(*a, **k):
+            self.calls["unpack"] += 1
+            return orig_unpack(*a, **k)
+
+        monkeypatch.setattr(packing, "pack", count_pack)
+        monkeypatch.setattr(packing, "unpack", count_unpack)
+
+
+class TestZeroRepackSteadyState:
+    @pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+    def test_step_is_resident(self, kind, monkeypatch):
+        """Un-jitted packed step with packed grads: zero pack/unpack even
+        at trace level, for both the comm and no-comm branches."""
+        opt = make_optimizer(kind, K=4, eta=1e-2, period=2,
+                             backend="pallas")
+        state = opt.init(ragged_tree(KEY, K=4))
+        assert is_packed_state(state)
+        gbuf = 0.5 * state.buf
+        counter = _PackCounter(monkeypatch)
+        for _ in range(4):
+            state = opt.step(state, gbuf)
+        assert counter.calls == {"pack": 0, "unpack": 0}
+
+    @pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+    def test_round_step_is_resident(self, kind, monkeypatch):
+        """round_step hands grad_fn the resident buffer; with a buffer
+        grad_fn the whole round (p fused local steps + gossip) performs
+        zero pack/unpack."""
+        opt = make_optimizer(kind, K=4, eta=1e-2, period=3,
+                             backend="pallas")
+        state = opt.init(ragged_tree(KEY, K=4))
+        batches = jnp.zeros((3, 4, 1))  # p microbatches, unused by grad_fn
+        grad_fn = lambda buf, batch: 0.5 * buf
+        counter = _PackCounter(monkeypatch)
+        state = opt.round(state, grad_fn, batches)
+        assert counter.calls == {"pack": 0, "unpack": 0}
+        assert int(state.count) == 3
+
+    def test_pytree_grads_pack_once_at_boundary(self, monkeypatch):
+        """Convenience path: pytree grads are packed exactly once per step
+        (the boundary pack), never unpacked."""
+        opt = make_optimizer("d-adam", K=4, eta=1e-2, backend="pallas")
+        state = opt.init(ragged_tree(KEY, K=4))
+        grads = jax.tree_util.tree_map(lambda x: 0.1 * x, state.params)
+        counter = _PackCounter(monkeypatch)
+        opt.step(state, grads)
+        assert counter.calls == {"pack": 1, "unpack": 0}
+
+    def test_shape_mismatched_buffer_grads_rejected(self):
+        opt = make_optimizer("d-adam", K=4, backend="pallas")
+        state = opt.init(ragged_tree(KEY, K=4))
+        with pytest.raises(ValueError, match="packed grads"):
+            opt.step(state, state.buf[:, :-1])
+
+    def test_bare_array_grads_accepted(self):
+        """A bare-array params tree (valid under backend='reference') must
+        keep accepting bare-array grads under 'pallas' — regression: any
+        jax.Array used to be treated as an already-packed buffer."""
+        for backend in ("reference", "pallas"):
+            opt = make_optimizer("d-adam", K=4, eta=1e-2, backend=backend)
+            state = opt.init(jnp.ones((4, 37)))
+            state = opt.step(state, 0.1 * jnp.ones((4, 37)))
+        np.testing.assert_allclose(
+            np.asarray(opt.params_of(state)),
+            np.asarray(opt.params_of(opt.step(
+                make_optimizer("d-adam", K=4, eta=1e-2,
+                               backend="reference").init(jnp.ones((4, 37))),
+                0.1 * jnp.ones((4, 37))))),
+            rtol=2e-5, atol=2e-6)
+
+
+# ------------------------- gossip kernel parity -----------------------------
+
+
+class TestGossipKernel:
+    @pytest.mark.parametrize("name", ["ring", "exponential",
+                                      "fully_connected"])
+    def test_mix_matches_reference_roll(self, name):
+        topo = make_topology(name, 8)
+        buf = jax.random.normal(KEY, (8, 256, 128))
+        out = ops.gossip_mix(buf, topo.offsets, topo.offset_weights,
+                             topo.self_weight)
+        ref = gossip_roll({"x": buf}, topo)["x"]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_mix_matches_dense_einsum(self):
+        topo = make_topology("ring", 5)
+        buf = jax.random.normal(KEY, (5, 256, 128))
+        out = ops.gossip_mix(buf, topo.offsets, topo.offset_weights,
+                             topo.self_weight)
+        W = jnp.asarray(topo.weights, jnp.float32)
+        ref = jnp.einsum("kj,jrc->krc", W, buf)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_consensus_matches_reference(self):
+        topo = make_topology("ring", 6)
+        cfg = CDAdamConfig(gamma=0.37)
+        ks = jax.random.split(KEY, 2 + len(topo.offsets))
+        x = jax.random.normal(ks[0], (6, 256, 128))
+        hs = jax.random.normal(ks[1], (6, 256, 128))
+        hns = tuple(jax.random.normal(k, (6, 256, 128)) for k in ks[2:])
+        out = ops.consensus_mix(x, hs, hns, topo.offset_weights, cfg.gamma)
+        ref = cdadam._mix_with_hats({"x": x}, {"x": hs},
+                                    tuple({"x": h} for h in hns), topo,
+                                    cfg)["x"]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_misaligned_buffer_rejected(self):
+        with pytest.raises(ValueError, match="rows"):
+            ops.gossip_mix(jnp.zeros((4, 100, 128)), (1,), (0.5,), 0.5)
+        with pytest.raises(ValueError, match="buffer"):
+            ops.gossip_mix(jnp.zeros((4, 256)), (1,), (0.5,), 0.5)
+
+
+# ---------------------- resident-layout soundness ---------------------------
+
+
+class TestResidentInvariants:
+    @pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+    def test_padding_stays_zero_across_steps(self, kind):
+        """repack(unpack(buf)) == buf bitwise after many steps — i.e. the
+        kernels never leak nonzero values into the tile padding, so the
+        resident buffer and its pytree view stay interchangeable."""
+        opt = make_optimizer(kind, K=4, eta=1e-2, period=2,
+                             weight_decay=0.01, backend="pallas")
+        state = opt.init(ragged_tree(KEY, K=4))
+        step = jax.jit(lambda s, g, opt=opt: opt.step(s, g))
+        for t in range(6):
+            g = jax.tree_util.tree_map(
+                lambda x: 0.5 * x + 0.01 * (t + 1), opt.params_of(state))
+            state = step(state, g)
+        np.testing.assert_array_equal(
+            np.asarray(packing.pack(state.params, state.spec)),
+            np.asarray(state.buf))
+        if kind == "cd-adam":
+            np.testing.assert_array_equal(
+                np.asarray(packing.pack(state.hat_self, state.spec)),
+                np.asarray(state.hat_buf))
+
+    def test_views_match_reference_init(self):
+        params = ragged_tree(KEY, K=4)
+        cfg = DAdamConfig(backend="pallas", moment_dtype=jnp.bfloat16)
+        state = dadam.init(params, cfg)
+        assert isinstance(state, PackedDAdamState)
+        assert_trees_equal(state.params, params)
+        assert state.moments.m["w"].dtype == jnp.bfloat16
+        assert int(state.moments.count) == 0
+        ref = dadam.init(params, DAdamConfig(moment_dtype=jnp.bfloat16))
+        assert_trees_equal(state.unpacked().params, ref.params)
+        assert_trees_equal(state.moments.m, ref.moments.m)
+
+
+# ---------------------- checkpoint backend portability ----------------------
+
+
+class TestCheckpointPortability:
+    def _stepped_states(self, kind, tmp_path, steps=3):
+        """The same 3-step trajectory under both backends (they are
+        allclose but not bit-identical; portability is asserted per
+        backend against its own checkpoint)."""
+        params = ragged_tree(KEY, K=4)
+        out = {}
+        for backend in ("reference", "pallas"):
+            opt = make_optimizer(kind, K=4, eta=1e-2, period=2,
+                                 moment_dtype=jnp.bfloat16,
+                                 backend=backend)
+            s = opt.init(jax.tree_util.tree_map(jnp.copy, params))
+            step = jax.jit(lambda s, g, opt=opt: opt.step(s, g))
+            for t in range(steps):
+                g = jax.tree_util.tree_map(
+                    lambda x: 0.5 * x + 0.01 * (t + 1), opt.params_of(s))
+                s = step(s, g)
+            out[backend] = (opt, s)
+        return out
+
+    @pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+    def test_pallas_save_restores_under_reference(self, kind, tmp_path):
+        """Save a packed state; restore into a reference-backend state:
+        bit-identical params AND bfloat16 moments (and hat trees)."""
+        states = self._stepped_states(kind, tmp_path)
+        _, packed = states["pallas"]
+        ref_opt, ref_state = states["reference"]
+        path = str(tmp_path / "packed.npz")
+        save(path, packed, step=3)
+        restored, step = restore(path, ref_state)
+        assert step == 3
+        assert type(restored) is type(ref_state)
+        assert_trees_equal(restored.params, packed.params)
+        assert restored.moments.m["w"].dtype == jnp.bfloat16
+        assert_trees_equal(restored.moments.m, packed.moments.m)
+        assert_trees_equal(restored.moments.v, packed.moments.v)
+        if kind == "cd-adam":
+            assert_trees_equal(restored.hat_self, packed.hat_self)
+            assert len(restored.hat_nbrs) == len(packed.hat_nbrs)
+            for hr, hp in zip(restored.hat_nbrs, packed.hat_nbrs):
+                assert_trees_equal(hr, hp)
+
+    @pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+    def test_reference_save_restores_into_packed(self, kind, tmp_path):
+        """The reverse direction: a reference-backend checkpoint restores
+        into a packed like-state and the resident buffers reproduce it
+        bit-for-bit (and the restored state still steps)."""
+        states = self._stepped_states(kind, tmp_path)
+        ref_opt, ref_state = states["reference"]
+        pal_opt, packed = states["pallas"]
+        path = str(tmp_path / "ref.npz")
+        save(path, ref_state, step=3)
+        restored, _ = restore(path, packed)
+        assert is_packed_state(restored)
+        assert_trees_equal(restored.params, ref_state.params)
+        assert_trees_equal(restored.moments.m, ref_state.moments.m)
+        assert int(restored.count) == int(ref_state.moments.count)
+        restored = pal_opt.step(restored, 0.1 * restored.buf)  # still live
+        assert int(restored.count) == 4
+
+    def test_cdadam_reference_roundtrip_with_hat_nbrs(self, tmp_path):
+        """Plain CDAdamState (tuple-of-pytrees hat_nbrs) round-trips —
+        regression for the tuple flatten/ordering and bf16 moments."""
+        _, state = self._stepped_states("cd-adam", tmp_path)["reference"]
+        path = str(tmp_path / "cd.npz")
+        save(path, state, step=7)
+        like = jax.tree_util.tree_map(jnp.zeros_like, state)
+        restored, step = restore(path, like)
+        assert step == 7
+        assert_trees_equal(restored, state)
+
+
+# ------------------------ comm-bytes accounting -----------------------------
+
+
+class TestCommBytesPerRound:
+    def _params(self, K):
+        return {"w": jnp.zeros((K, 10, 10)), "b": jnp.zeros((K, 3))}
+
+    def test_non_shift_topology_counts_weight_matrix_degree(self):
+        """Regression: torus(2x2) has no shift offsets => the old code
+        reported 0 bytes despite gossip_dense moving the full stack."""
+        opt = make_optimizer("d-adam", K=4, topology="torus")
+        params = self._params(4)
+        per_worker_bytes = 103 * 4
+        deg = len(opt.topo.neighbors_of(0))
+        assert deg > 0 and not opt.topo.offsets
+        assert opt.comm_bytes_per_round(params) == deg * per_worker_bytes
+
+    def test_dense_mixing_counts_weight_matrix_degree(self):
+        """mixing='dense' ignores the shift offsets at runtime; the
+        accounting must follow the weight matrix, not the offsets."""
+        opt = make_optimizer("d-adam", K=6, topology="ring", mixing="dense")
+        params = self._params(6)
+        assert opt.comm_bytes_per_round(params) == 2 * 103 * 4
+
+    def test_ring_roll_unchanged(self):
+        opt = make_optimizer("d-adam", K=6, topology="ring")
+        params = self._params(6)
+        assert opt.comm_bytes_per_round(params) == \
+            len(opt.topo.offsets) * 103 * 4
+
+    def test_single_worker_sends_nothing(self):
+        opt = make_optimizer("d-adam", K=1, topology="ring")
+        assert opt.comm_bytes_per_round(self._params(1)) == 0
+
+    def test_cdadam_compressed_bytes(self):
+        opt = make_optimizer("cd-adam", K=4, topology="ring",
+                             compressor="sign")
+        params = self._params(4)
+        # sign wire format: 1 byte/elem + 4-byte scale per leaf
+        assert opt.comm_bytes_per_round(params) == \
+            len(opt.topo.offsets) * (100 + 4 + 3 + 4)
+
+
+# ------------------- trainer end-to-end (packed grads) ----------------------
+
+
+class TestTrainerPackedPath:
+    @pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+    def test_fit_matches_reference_backend(self, kind):
+        """DecentralizedTrainer differentiates through unpack for packed
+        states; the whole fit loop must track the reference backend."""
+        from repro.train import DecentralizedTrainer
+
+        K, d = 4, 37  # deliberately lane-hostile
+        centers = jax.random.normal(KEY, (K, d))
+
+        def loss_fn(params, batch):
+            return jnp.sum((params["x"] - batch) ** 2)
+
+        def batch_iter():
+            t = 0
+            while True:
+                yield centers + 0.01 * t
+                t += 1
+
+        logs = {}
+        for backend in ("reference", "pallas"):
+            opt = make_optimizer(kind, K=K, eta=5e-2, period=2,
+                                 backend=backend)
+            trainer = DecentralizedTrainer(loss_fn, opt)
+            state = trainer.init({"x": jnp.zeros((d,))})
+            assert is_packed_state(state) == (backend == "pallas")
+            state, log = trainer.fit(state, batch_iter(), 6, log_every=2)
+            logs[backend] = (log, opt.params_of(state))
+        ref_log, ref_params = logs["reference"]
+        pal_log, pal_params = logs["pallas"]
+        np.testing.assert_allclose(ref_log.loss, pal_log.loss,
+                                   rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ref_params["x"]),
+                                   np.asarray(pal_params["x"]),
+                                   rtol=2e-5, atol=2e-6)
