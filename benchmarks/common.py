@@ -11,7 +11,6 @@ import time
 from typing import Callable, Dict, Iterator, List, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_optimizer

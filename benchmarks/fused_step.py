@@ -2,13 +2,19 @@
 
 Times one jitted optimizer step (the in-graph comm-skip cond included)
 over a stacked synthetic parameter pytree, for both D-Adam and CD-Adam,
-across three execution paths:
+across four execution paths:
 
 * ``reference``        — jnp tree_map update + roll gossip,
 * ``pallas_resident``  — the packed-resident runtime: state stays in the
   (K, rows, 128) layout across steps, grads enter as a packed buffer,
   fused-Adam / gossip / sign-compress kernels run on resident buffers
-  with zero per-step pack/unpack, and
+  with zero per-step pack/unpack,
+* ``pallas_axis``      — the same resident runtime with comm='axis': the
+  packed buffer is sharded one worker per slot of a 'worker' mesh and the
+  step runs per-shard inside shard_map with ppermute gossip — this is the
+  per-worker wall clock the paper's linear-speedup claim is about (needs
+  >= K devices; when invoked as __main__ on CPU the script forces K host
+  devices before jax initializes), and
 * ``pallas_repack``    — the PR-1 dispatch that re-packs the pytree state
   around the kernels every step (kept precisely to expose what residency
   saves).
@@ -31,7 +37,25 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    # the pallas_axis path needs one device per worker; opt into forced
+    # host devices BEFORE jax initializes (no-op on accelerator hosts or
+    # when the caller already set XLA_FLAGS)
+    _workers = 8
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a.startswith("--workers="):
+                _workers = int(_a.split("=", 1)[1])
+            elif _a == "--workers" and _i + 1 < len(sys.argv):
+                _workers = int(sys.argv[_i + 1])
+        except ValueError:
+            break  # malformed value: leave it to argparse's usage error
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_workers}")
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +63,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.core import cdadam, dadam, make_compressor, make_optimizer
 from repro.kernels import pack as packing
+from repro.launch.mesh import make_worker_mesh
 
 LANE = 128
 
@@ -119,6 +144,27 @@ def bench_kind(kind: str, K: int, size: int, period: int) -> dict:
     emit(f"fused_step/{kind}_pallas_resident", us_res,
          f"{n * 4 / (us_res / 1e6) / 1e9:.2f}GB/s param-touch")
 
+    # pallas axis: the SAME resident runtime, sharded one worker per slot
+    # of a 'worker' mesh — per-worker wall clock instead of a stacked
+    # simulation. Skipped (null) when the host has fewer devices than
+    # workers.
+    if jax.device_count() >= K:
+        mesh = make_worker_mesh(K)
+        aopt = make_optimizer(kind, K=K, eta=1e-3, period=period,
+                              backend="pallas", comm="axis", mesh=mesh)
+        astate = aopt.init(jax.tree_util.tree_map(jnp.copy, params))
+        gbuf_axis = jax.device_put(gbuf, astate.buf.sharding)
+        us_axis = time_stepped(jax.jit(lambda s, g: aopt.step(s, g)),
+                               astate, gbuf_axis)
+        rec["pallas_axis_us_per_step"] = round(us_axis, 1)
+        emit(f"fused_step/{kind}_pallas_axis", us_axis,
+             f"{K}-device shard_map; "
+             f"{n * 4 / (us_axis / 1e6) / 1e9:.2f}GB/s param-touch")
+    else:
+        rec["pallas_axis_us_per_step"] = None
+        rec["pallas_axis_skipped"] = (
+            f"needs {K} devices, have {jax.device_count()}")
+
     # pallas repack: the pre-residency dispatch, pack/unpack every step
     rstate, rstep = _repack_state_and_step(kind, popt, params)
     us_rep = time_stepped(rstep, rstate, grads)
@@ -138,13 +184,19 @@ def bench_kind(kind: str, K: int, size: int, period: int) -> dict:
     return rec
 
 
-def main(workers: int = 8, size: int = 1 << 16, period: int = 1) -> dict:
+def main(workers: int = 8, size: int = 1 << 16, period: int = 1,
+         out: str = "") -> dict:
     record = {"benchmark": "fused_step",
               "jax_version": jax.__version__,
               "platform": jax.default_backend(),
+              "device_count": jax.device_count(),
               "records": [bench_kind(k, workers, size, period)
                           for k in ("d-adam", "cd-adam")]}
     print("JSON " + json.dumps(record))
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {out}")
     return record
 
 
@@ -156,5 +208,8 @@ if __name__ == "__main__":
                          "interpret mode)")
     ap.add_argument("--period", type=int, default=1,
                     help="p=1 so the timed step includes communication")
+    ap.add_argument("--out", default="",
+                    help="also write the JSON record to this path "
+                         "(CI uploads it as the bench-smoke artifact)")
     args = ap.parse_args()
-    main(args.workers, args.size, args.period)
+    main(args.workers, args.size, args.period, args.out)

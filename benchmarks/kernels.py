@@ -6,7 +6,6 @@ the XLA-path timings that ARE meaningful on this host (fused-vs-unfused
 Adam, chunked-vs-naive attention) as the derived column."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.kernels import ops, ref

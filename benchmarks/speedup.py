@@ -2,7 +2,6 @@
 fixed per-step, the gradient-norm/loss trajectory vs #samples-processed
 improves ~linearly with K (O(1/sqrt(KT)) leading term)."""
 import jax
-import numpy as np
 
 from benchmarks.common import TASK, emit
 from repro.core import make_optimizer

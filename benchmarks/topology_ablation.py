@@ -8,7 +8,7 @@ topologies (rho: ring < exp < full = 1) and report final loss (should be
 import jax
 
 from benchmarks.common import TASK, emit, ctr_iter
-from repro.core import make_optimizer, make_topology
+from repro.core import make_optimizer
 from repro.models.deepfm import deepfm_loss, init_deepfm
 from repro.train import DecentralizedTrainer
 

@@ -5,7 +5,6 @@ loss + accuracy per communication MB (the paper's Fig. 1a / 2a panel).
 Hyperparameters per Section 6.1: eta=1e-3, weight decay 1e-4, 8 workers,
 ring. Scaled down: width-8 ResNet20, small batches, synthetic data."""
 import jax
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import make_optimizer

@@ -6,7 +6,6 @@ decode, across three architecture families (dense / SSM / hybrid).
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_reduced
 from repro.models import build_model

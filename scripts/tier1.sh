@@ -5,14 +5,23 @@
 #   bash scripts/tier1.sh -m ""       # override: run everything
 #
 # Forces the host-CPU backend with 8 virtual devices so the sharding /
-# collective paths (shard_map, ppermute gossip) are exercised without
-# accelerators; Pallas kernels run via interpret mode.
+# collective paths (shard_map, ppermute gossip, comm='axis') are exercised
+# without accelerators; Pallas kernels run via interpret mode.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+# Persistent jit-compile cache: the suite's wall clock is dominated by
+# per-test XLA compiles, which are identical run to run. CI persists this
+# directory via actions/cache (keyed on jax version + runner platform);
+# locally it just makes the second run fast. Threshold 0 caches even
+# sub-second compiles — there are hundreds of small ones.
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$PWD/.jax_cache}"
+export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS="${JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS:-0}"
+mkdir -p "$JAX_COMPILATION_CACHE_DIR"
 
 # Parallelize across cores when pytest-xdist is available (CI installs it;
 # falls back to serial where it isn't). The wall clock is dominated by

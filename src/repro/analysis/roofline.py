@@ -13,7 +13,6 @@ conventions via the ``per_device`` flag.
 from __future__ import annotations
 
 import dataclasses
-import json
 from typing import Any, Dict, Optional
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS

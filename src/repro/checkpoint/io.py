@@ -12,6 +12,13 @@ layout, so a checkpoint written under ``backend='pallas'`` restores
 bit-identically under ``backend='reference'`` and vice versa. The
 pack/unpack here is a checkpoint *boundary* — the steady-state training
 loop never touches it.
+
+Checkpoints are also **mesh/comm-portable**: ``save`` gathers sharded
+leaves to host (a comm='axis' state sharded over a worker mesh writes the
+same bytes as its single-device twin), and ``restore`` places every
+restored leaf with the sharding of the corresponding ``like`` leaf — so a
+stacked-comm checkpoint restores straight onto a comm='axis' worker mesh
+and vice versa.
 """
 from __future__ import annotations
 
@@ -44,6 +51,15 @@ def _to_portable(tree: PyTree) -> PyTree:
     return jax.tree_util.tree_map(
         lambda x: x.unpacked() if _is_packed(x) else x, tree,
         is_leaf=_is_packed)
+
+
+def _placed_like(arr: Any, ref: Any) -> Any:
+    """Give a restored leaf the placement of its ``like`` counterpart, so
+    restoring onto a sharded state (e.g. comm='axis' over a worker mesh)
+    lands the data where the live state keeps it."""
+    if isinstance(ref, jax.Array):
+        return jax.device_put(arr, ref.sharding)
+    return arr
 
 
 def _path_str(path) -> str:
@@ -104,8 +120,18 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
             [l.unpacked() if _is_packed(l) else l for l in outer_leaves])
         restored, step = restore(path, portable_like)
         slots = outer_td.flatten_up_to(restored)
+
+        def repacked(orig, slot):
+            if not _is_packed(orig):
+                return slot
+            # repack, then re-place each buffer with the live state's
+            # sharding (mesh-portable: the checkpoint bytes are layout-
+            # and placement-agnostic)
+            return jax.tree_util.tree_map(
+                _placed_like, type(orig).from_unpacked(slot), orig)
+
         return outer_td.unflatten(
-            [type(orig).from_unpacked(slot) if _is_packed(orig) else slot
+            [repacked(orig, slot)
              for orig, slot in zip(outer_leaves, slots)]), step
     with open(path + ".json") as f:
         side = json.load(f)
@@ -123,5 +149,5 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"shape mismatch at {key}: "
                              f"{arr.shape} vs {ref.shape}")
-        out.append(jnp.asarray(arr, dtype=ref.dtype))
+        out.append(_placed_like(jnp.asarray(arr, dtype=ref.dtype), ref))
     return jax.tree_util.tree_unflatten(treedef, out), side["step"]

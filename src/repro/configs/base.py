@@ -9,7 +9,7 @@ ShapeDtypeStruct in the dry-run — never allocated.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax.numpy as jnp
 

@@ -5,7 +5,6 @@ head_dim=64, rope theta 500k, tied embeddings.
 """
 import dataclasses
 
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ModelConfig, ParallelConfig
 

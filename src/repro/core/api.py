@@ -15,13 +15,24 @@ the stacked (K, rows, 128) kernel layout across steps and ``opt.step``
 accepts grads either as a congruent pytree or as an already packed buffer.
 ``opt.params_of`` transparently materializes the unpacked pytree view at
 eval/logging boundaries for both backends.
+
+With ``comm='axis'`` (device-parallel execution) pass ``mesh=`` with a
+worker axis of size K: ``opt.init`` places every state leaf's leading
+worker dim on that axis and ``opt.step`` / ``opt.round`` run the SAME core
+step per-shard inside ``shard_map``, gossiping with ``ppermute`` — for the
+pallas backend each device updates its own (1, rows, 128) shard of the
+resident packed buffer and only packed neighbor row-blocks (or, for
+CD-Adam, the int8 sign payload + per-(worker, leaf) scales) travel over
+the axis.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, Optional
 
 import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import baselines, cdadam, dadam
 from repro.core.cdadam import CDAdamConfig, PackedCDAdamState
@@ -37,6 +48,80 @@ def is_packed_state(state: Any) -> bool:
     return isinstance(state, (PackedDAdamState, PackedCDAdamState))
 
 
+# --------------------- comm='axis' shard_map dispatch -----------------------
+
+
+def worker_pspec_tree(tree: PyTree, K: int, axis_name: str,
+                      worker_dim: int = 0) -> PyTree:
+    """PartitionSpecs putting each leaf's worker dim (size K at
+    ``worker_dim``) on ``axis_name``; scalars and worker-free leaves are
+    replicated. ``worker_dim=1`` matches ``round``'s (p, K, ...) batch
+    leaves."""
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) > worker_dim and shape[worker_dim] == K:
+            return P(*([None] * worker_dim + [axis_name]))
+        return P()
+    return jax.tree_util.tree_map(one, tree)
+
+
+def shard_over_workers(tree: PyTree, mesh: Any, K: int,
+                       axis_name: str) -> PyTree:
+    """device_put every leaf with its worker dim on the mesh axis."""
+    specs = worker_pspec_tree(tree, K, axis_name)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs)
+    return jax.device_put(tree, shardings)
+
+
+def _with_axis_execution(opt: "DecentralizedOptimizer", mesh: Any,
+                         axis_name: str) -> "DecentralizedOptimizer":
+    """Install comm='axis' execution: ``init`` shards the state over the
+    worker mesh axis; ``step`` / ``round`` run the unmodified core step
+    per-shard inside shard_map (one worker per slot of ``axis_name``), so
+    worker shifts lower to ppermute and — for the pallas backend — the
+    fused kernels consume each worker's (1, rows, 128) resident shard."""
+    K = opt.K
+    if mesh is None:
+        raise ValueError("comm='axis' needs mesh= (a jax Mesh with a "
+                         f"{axis_name!r} axis of size K)")
+    if axis_name not in mesh.shape or mesh.shape[axis_name] != K:
+        raise ValueError(
+            f"comm='axis' needs mesh axis {axis_name!r} of size K={K}; "
+            f"mesh has {dict(mesh.shape)}")
+    if K > 1 and not opt.topo.offsets:
+        # fail at construction, not at first step trace: axis gossip is
+        # ppermute along the shift offsets and has no dense fallback
+        raise ValueError(
+            f"comm='axis' needs a shift-invariant topology; "
+            f"{opt.topo.name!r} has no shift structure (use comm='stacked' "
+            "for dense-mixing graphs)")
+    base_init, base_step, base_round = opt.init, opt.step, opt.round
+
+    def init(params: PyTree) -> Any:
+        return shard_over_workers(base_init(params), mesh, K, axis_name)
+
+    def step(state: Any, grads: PyTree) -> Any:
+        state_specs = worker_pspec_tree(state, K, axis_name)
+        return shard_map(
+            base_step, mesh=mesh,
+            in_specs=(state_specs, worker_pspec_tree(grads, K, axis_name)),
+            out_specs=state_specs, check_rep=False)(state, grads)
+
+    def round_(state: Any, grad_fn: Callable, batches: Any) -> Any:
+        state_specs = worker_pspec_tree(state, K, axis_name)
+        return shard_map(
+            lambda s, b: base_round(s, grad_fn, b), mesh=mesh,
+            in_specs=(state_specs,
+                      worker_pspec_tree(batches, K, axis_name,
+                                        worker_dim=1)),
+            out_specs=state_specs, check_rep=False)(state, batches)
+
+    return dataclasses.replace(
+        opt, init=init, step=step,
+        round=round_ if base_round is not None else None, mesh=mesh)
+
+
 @dataclasses.dataclass(frozen=True)
 class DecentralizedOptimizer:
     name: str
@@ -47,6 +132,7 @@ class DecentralizedOptimizer:
     step: Callable[[Any, PyTree], Any]
     round: Callable[[Any, Callable, Any], Any]
     params_of: Callable[[Any], PyTree]
+    mesh: Any = None              # set when comm='axis': the worker mesh
 
     @property
     def K(self) -> int:
@@ -90,10 +176,14 @@ def make_optimizer(
     mixing: str = "roll",
     moment_dtype=None,
     backend: str = "reference",
+    comm: str = "stacked",
+    mesh: Any = None,
+    axis_name: str = "worker",
     **comp_kw,
 ) -> DecentralizedOptimizer:
     topo = make_topology(topology, K)
     kind = kind.lower().replace("_", "-")
+    opt: Optional[DecentralizedOptimizer] = None
 
     if kind in ("d-adam", "dadam", "d-adam-vanilla"):
         if kind == "d-adam-vanilla":
@@ -101,9 +191,9 @@ def make_optimizer(
         cfg = DAdamConfig(eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                           period=period, weight_decay=weight_decay,
                           mixing=mixing, moment_dtype=moment_dtype,
-                          backend=backend)
+                          backend=backend, comm=comm, axis_name=axis_name)
         cfg.validate()
-        return DecentralizedOptimizer(
+        opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=None,
             init=lambda p: dadam.init(p, cfg),
             step=lambda s, g: dadam.step(s, g, topo, cfg),
@@ -111,7 +201,7 @@ def make_optimizer(
             params_of=lambda s: s.params,
         )
 
-    if kind in ("cd-adam", "cdadam"):
+    elif kind in ("cd-adam", "cdadam"):
         comp = (compressor if isinstance(compressor, Compressor)
                 else make_compressor(compressor, **comp_kw))
         if backend == "pallas" and comp.name != "sign":
@@ -121,9 +211,10 @@ def make_optimizer(
         cfg = CDAdamConfig(eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                            period=period, weight_decay=weight_decay,
                            gamma=gamma, mixing=mixing,
-                           moment_dtype=moment_dtype, backend=backend)
+                           moment_dtype=moment_dtype, backend=backend,
+                           comm=comm, axis_name=axis_name)
         cfg.validate()
-        return DecentralizedOptimizer(
+        opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=comp,
             init=lambda p: cdadam.init(p, cfg, topo),
             step=lambda s, g: cdadam.step(s, g, topo, cfg, comp),
@@ -132,13 +223,15 @@ def make_optimizer(
             params_of=lambda s: s.params,
         )
 
-    if kind in ("d-psgd", "dpsgd"):
+    elif kind in ("d-psgd", "dpsgd"):
         if backend != "reference":
             raise ValueError("d-psgd has no kernel backend; "
                              "use backend='reference'")
+        if comm != "stacked":
+            raise ValueError("d-psgd only implements comm='stacked'")
         cfg = baselines.DPSGDConfig(eta=eta, weight_decay=weight_decay,
                                     period=period, mixing=mixing)
-        return DecentralizedOptimizer(
+        opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=None,
             init=lambda p: baselines.dpsgd_init(p, cfg),
             step=lambda s, g: baselines.dpsgd_step(s, g, topo, cfg),
@@ -146,4 +239,10 @@ def make_optimizer(
             params_of=lambda s: s.params,
         )
 
-    raise KeyError(f"unknown optimizer kind {kind!r}")
+    if opt is None:
+        raise KeyError(f"unknown optimizer kind {kind!r}")
+    if getattr(opt.cfg, "comm", "stacked") == "axis":
+        opt = _with_axis_execution(opt, mesh, axis_name)
+    elif mesh is not None:
+        raise ValueError("mesh= is only meaningful with comm='axis'")
+    return opt

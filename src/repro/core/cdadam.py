@@ -9,15 +9,17 @@ At a communication round (mod(t+1, p) == 0), worker k:
 
 Every worker stores xhat copies of itself and each neighbor (CHOCO-style
 state), so the mixing step needs *no* communication; only the compressed
-residual q travels. In the stacked-K runtime the neighbor exchange of the
-*encoded* payload (int8 sign bits / top-k pairs) is a ``jnp.roll`` over the
-sharded worker dim — i.e. the lowered collective-permute genuinely carries
-the compressed byte count.
+residual q travels. The neighbor exchange of the *encoded* payload (int8
+sign bits / top-k pairs) is a worker shift (:func:`repro.core.dadam
+.shift_worker`): under comm='stacked' a ``jnp.roll`` over the (possibly
+sharded) worker dim, under comm='axis' a ``jax.lax.ppermute`` over the
+worker mesh axis inside shard_map — either way the lowered
+collective-permute genuinely carries the compressed byte count.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Sequence, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,11 +154,16 @@ def _decode_stacked(comp: Compressor, payload: PyTree, like: PyTree) -> PyTree:
     )
 
 
-def _roll_payload(payload: PyTree, shift: int) -> PyTree:
-    """Shift the per-worker payload along the worker dim: worker k receives
-    worker (k + s) % K's message. Scalars-per-worker roll too (axis 0)."""
+def _shift_payload(payload: PyTree, s: int, topo: Topology,
+                   cfg: CDAdamConfig) -> PyTree:
+    """Worker k receives worker (k + s) % K's encoded message — the wire
+    hop of Alg. 2 line 10, carrying only the compressed payload. A roll
+    over the stacked worker dim (comm='stacked'; per-worker scale scalars
+    roll along axis 0 too) or a ppermute over the worker mesh axis
+    (comm='axis')."""
+    axis = cfg.axis_name if cfg.comm == "axis" else None
     return jax.tree_util.tree_map(
-        lambda a: jnp.roll(a, shift, axis=0) if a.ndim >= 1 else a, payload
+        lambda a: dadam.shift_worker(a, s, topo.K, axis), payload
     )
 
 
@@ -210,11 +217,11 @@ def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
         lambda h, q: h + q.astype(h.dtype), hat_self, q_dec)
 
     # (10)+(11b) neighbors: worker k needs q_{(k+s)%K}; the *encoded* payload
-    # travels (roll over the sharded worker dim => compressed-size
-    # collective-permute), then is decoded locally.
+    # travels (worker shift => compressed-size collective-permute in either
+    # comm mode), then is decoded locally.
     new_hat_nbrs = []
     for s, hn in zip(topo.offsets, hat_nbrs):
-        recv_enc = _roll_payload(q_enc, -s)
+        recv_enc = _shift_payload(q_enc, s, topo, cfg)
         recv = _decode_stacked(comp, recv_enc, resid)
         new_hat_nbrs.append(jax.tree_util.tree_map(
             lambda h, q: h + q.astype(h.dtype), hn, recv))
@@ -247,11 +254,13 @@ def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
     scale = jax.tree_util.tree_map(lambda t: t[1], enc, is_leaf=is_enc)
     new_hat_self = jax.tree_util.tree_map(lambda t: t[2], enc, is_leaf=is_enc)
 
+    axis = cfg.axis_name if cfg.comm == "axis" else None
     new_hat_nbrs = []
     for s, hn in zip(topo.offsets, hat_nbrs):
         def upd(h, qb, sc, s=s):
-            q_recv = jnp.roll(qb, -s, axis=0)
-            sc_recv = jnp.roll(sc, -s).reshape((-1,) + (1,) * (qb.ndim - 1))
+            q_recv = dadam.shift_worker(qb, s, topo.K, axis)
+            sc_recv = dadam.shift_worker(sc, s, topo.K, axis)
+            sc_recv = sc_recv.reshape((-1,) + (1,) * (qb.ndim - 1))
             return h + (sc_recv * q_recv.astype(jnp.float32)).astype(h.dtype)
         new_hat_nbrs.append(jax.tree_util.tree_map(upd, hn, q, scale))
 
@@ -268,9 +277,11 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
     stays per (worker, leaf) with the true-element-count divisor, so the
     math is bit-for-bit the reference semantics, with zero pack/unpack.
     (10)+(11b) update the neighbor copies from the payload: the int8 q
-    buffer and the (K, L) per-leaf scales roll over the worker dim — still
-    exactly the compressed byte count on the wire when the dim is
-    sharded."""
+    buffer and the (K, L) per-leaf scales travel by worker shift — a roll
+    over the stacked dim (comm='stacked') or a ppermute over the worker
+    mesh axis (comm='axis', where the local buffers are one worker's
+    (1, rows, 128) shard) — still exactly the compressed byte count on
+    the wire."""
     from repro.kernels import ops
 
     x_new = ops.consensus_mix(state_half.buf, state_half.hat_buf,
@@ -293,10 +304,11 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
 
     # broadcast the per-(worker, leaf) scale over each leaf's row range
     rows_per_leaf = np.array([r1 - r0 for r0, r1 in ranges])
+    axis = cfg.axis_name if cfg.comm == "axis" else None
 
     def upd(hn, shift):
-        q_recv = jnp.roll(q_buf, -shift, axis=0)
-        sc_recv = jnp.roll(scales, -shift, axis=0)
+        q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
+        sc_recv = dadam.shift_worker(scales, shift, topo.K, axis)
         sc_rows = jnp.repeat(sc_recv, rows_per_leaf, axis=1,
                              total_repeat_length=spec.rows)   # (K, rows)
         return hn + (sc_rows[:, :, None]
@@ -383,57 +395,8 @@ def round_step(state: "CDAdamState | PackedCDAdamState",
     return _comm_round(inner, topo, cfg, comp)
 
 
-# ----------------------------- axis variant --------------------------------
-
-
-class CDAdamAxisState(NamedTuple):
-    params: PyTree
-    moments: AdamMoments
-    hat_self: PyTree
-    hat_nbrs: Tuple[PyTree, ...]
-
-
-def comm_round_axis(state_half: CDAdamAxisState, topo: Topology,
-                    cfg: CDAdamConfig, comp: Compressor,
-                    axis_name: str) -> CDAdamAxisState:
-    """Alg. 2 communication step inside ``shard_map`` over ``axis_name``.
-
-    Parameters here are the *local shard* of one worker (= one pod); the
-    encoded q payload is ppermuted to graph neighbors so the inter-pod link
-    carries only compressed bytes.
-    """
-    x_half, mom, hat_self, hat_nbrs = state_half
-    K = topo.K
-
-    def mixed(xh, hs, *hns):
-        acc = jnp.zeros_like(hs, dtype=jnp.float32)
-        for w, hn in zip(topo.offset_weights, hns):
-            acc = acc + w * (hn.astype(jnp.float32) - hs.astype(jnp.float32))
-        return (xh.astype(jnp.float32) + cfg.gamma * acc).astype(xh.dtype)
-
-    x_new = jax.tree_util.tree_map(mixed, x_half, hat_self, *hat_nbrs)
-    resid = jax.tree_util.tree_map(lambda a, b: a - b, x_new, hat_self)
-    q_enc = jax.tree_util.tree_map(
-        lambda x: comp.encode(x.reshape(-1)), resid)
-
-    def dec(payload, like):
-        return jax.tree_util.tree_map(
-            lambda p, x: comp.decode(p, (x.size,), x.dtype).reshape(x.shape),
-            payload, like,
-            is_leaf=lambda t: isinstance(t, dict)
-            and ("bits" in t or "values" in t or "q" in t),
-        )
-
-    new_hat_self = jax.tree_util.tree_map(
-        lambda h, q: h + q.astype(h.dtype), hat_self, dec(q_enc, resid))
-
-    new_hat_nbrs = []
-    for s, hn in zip(topo.offsets, hat_nbrs):
-        perm = [((k + s) % K, k) for k in range(K)]
-        recv_enc = jax.tree_util.tree_map(
-            lambda a: jax.lax.ppermute(a, axis_name, perm), q_enc)
-        recv = dec(recv_enc, resid)
-        new_hat_nbrs.append(jax.tree_util.tree_map(
-            lambda h, q: h + q.astype(h.dtype), hn, recv))
-
-    return CDAdamAxisState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))
+# The pre-unification ``CDAdamAxisState`` / ``comm_round_axis`` duplicate
+# of this algorithm is gone: comm='axis' now runs the SAME ``step`` /
+# ``round_step`` code inside shard_map (``make_optimizer(comm='axis',
+# mesh=...)`` installs the wrapper), with the worker shifts lowering to
+# ppermute via ``_shift_payload`` / ``dadam.shift_worker``.

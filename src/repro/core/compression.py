@@ -18,7 +18,6 @@ All functions are jit-safe (shape-static).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Tuple
 
 import jax

@@ -8,26 +8,33 @@ Per worker k and iteration t:
     if (t + 1) % p == 0:   x_{t+1} = sum_j W[k, j] * x_{t+1/2}^{(j)}
     else:                  x_{t+1} = x_{t+1/2}
 
-Two equivalent runtime realizations:
+Two equivalent runtime realizations, selected by ``DAdamConfig.comm`` and
+sharing one code path (the only difference is how "worker k reads worker
+(k + s) % K" is expressed — see :func:`shift_worker`):
 
-* **stacked**: every pytree leaf carries a leading worker dim ``K`` that the
-  launcher shards over the worker mesh axis. The Adam update is elementwise
-  (so the stacking is free) and gossip is either a dense mixing einsum
-  (paper-faithful baseline: lowered by XLA as gather-style collectives) or a
-  sum of ``jnp.roll`` shifts over the worker dim for shift-invariant graphs
-  (optimized: lowered as collective-permutes that only touch ring
-  neighbors).
-* **axis**: parameters are *not* stacked; the caller runs the step inside a
-  ``shard_map`` over a mesh axis (e.g. ``'pod'``), and gossip is expressed
-  with ``jax.lax.ppermute`` directly. Used when each worker is a whole pod.
+* **comm='stacked'**: every pytree leaf carries a leading worker dim ``K``
+  and the whole step runs as one program. Gossip is either a dense mixing
+  einsum (paper-faithful baseline: lowered by XLA as gather-style
+  collectives) or a sum of ``jnp.roll`` shifts over the worker dim for
+  shift-invariant graphs (optimized: lowered as collective-permutes that
+  only touch ring neighbors when the dim is sharded).
+* **comm='axis'**: the SAME stacked state is partitioned over a named mesh
+  axis (``cfg.axis_name``, one worker per mesh slot) and the step runs
+  per-shard inside ``shard_map``; every worker shift is a
+  ``jax.lax.ppermute`` over the axis, so the wire carries exactly one
+  neighbor block per offset. ``make_optimizer(comm='axis', mesh=...)``
+  installs the shard_map wrapper; the functions here only assume they are
+  traced with ``cfg.axis_name`` bound.
 
 Both share the same math; tests pin them against each other and against the
-K=1 == Adam identity.
+K=1 == Adam identity. The pallas backend composes with either comm mode:
+the resident packed (K, rows, 128) buffer is sharded along its leading dim
+and the fused kernels run on each worker's (1, rows, 128) shard.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,12 +59,16 @@ class DAdamConfig:
     period: int = 1             # p: communicate every p iterations
     weight_decay: float = 0.0   # L2 (paper: 1e-4 for CIFAR-10)
     bias_correction: bool = False  # paper's Alg. 1 has none; optional extra
-    mixing: str = "roll"        # 'dense' | 'roll' (stacked) — 'axis' variant
-                                # is selected by calling gossip_axis
+    mixing: str = "roll"        # 'dense' | 'roll' (comm='stacked' only)
     moment_dtype: Optional[Any] = None  # e.g. jnp.bfloat16 for huge models
     backend: str = "reference"  # 'reference' (jnp tree_map) | 'pallas'
                                 # (fused one-pass kernel over the packed
                                 # parameter vector; interpret mode off-TPU)
+    comm: str = "stacked"       # 'stacked' (roll over the leading worker
+                                # dim) | 'axis' (ppermute over axis_name
+                                # inside shard_map; one worker per slot)
+    axis_name: str = "worker"   # mesh axis carrying the worker dim when
+                                # comm='axis'
 
     def validate(self) -> None:
         if not 0 <= self.beta1 < 1 or not 0 <= self.beta2 < 1:
@@ -70,6 +81,17 @@ class DAdamConfig:
             raise ValueError(f"unknown mixing {self.mixing!r}")
         if self.backend not in ("reference", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.comm not in ("stacked", "axis"):
+            raise ValueError(f"unknown comm {self.comm!r}")
+        if self.comm == "axis":
+            if not self.axis_name:
+                raise ValueError("comm='axis' needs a non-empty axis_name")
+            if self.mixing == "dense":
+                raise ValueError(
+                    "comm='axis' gossips with ppermute along the graph "
+                    "offsets and has no dense-mixing lowering; use "
+                    "mixing='roll' (shift-invariant topology) or "
+                    "comm='stacked'")
         if self.backend == "pallas" and self.bias_correction:
             raise ValueError(
                 "backend='pallas' implements the paper's Alg. 1 update "
@@ -162,7 +184,20 @@ def local_update(
     return new_params, AdamMoments(new_m, new_v, count)
 
 
-# --------------------------- stacked-K gossip ------------------------------
+# ------------------------------- gossip ------------------------------------
+
+
+def shift_worker(x: jax.Array, s: int, K: int,
+                 axis_name: Optional[str] = None) -> jax.Array:
+    """Worker k reads worker (k + s) % K's value — THE primitive both comm
+    modes share. comm='stacked' (``axis_name=None``): a roll over the
+    leading worker dim, ``roll(x, -s, axis=0)[k] == x[(k + s) % K]``.
+    comm='axis': a ``ppermute`` over the mesh axis, shipping exactly one
+    neighbor block per offset on the wire."""
+    if axis_name is None:
+        return jnp.roll(x, -s, axis=0) if x.ndim >= 1 else x
+    perm = [((k + s) % K, k) for k in range(K)]  # (src, dst) pairs
+    return jax.lax.ppermute(x, axis_name, perm)
 
 
 def gossip_dense(params: PyTree, W: jax.Array | np.ndarray) -> PyTree:
@@ -182,15 +217,18 @@ def gossip_dense(params: PyTree, W: jax.Array | np.ndarray) -> PyTree:
     return jax.tree_util.tree_map(mix, params)
 
 
-def gossip_roll(params: PyTree, topo: Topology) -> PyTree:
-    """Shift-invariant gossip as a weighted sum of rolls over the worker dim.
+def gossip_shift(params: PyTree, topo: Topology,
+                 axis_name: Optional[str] = None) -> PyTree:
+    """Shift-invariant gossip — ONE implementation for both comm modes.
 
     mixed[k] = w_self * x[k] + sum_s w_s * x[(k + s) % K]
-    and x[(k+s) % K] == roll(x, -s, axis=0)[k].
 
-    When the leading dim is sharded over a mesh axis, each roll lowers to a
-    collective-permute touching only the true graph neighbors: ring gossip
-    costs 2 neighbor transfers instead of a K-way gather.
+    With ``axis_name=None`` each shift is a roll over the leading worker
+    dim (comm='stacked'; when that dim is sharded, XLA lowers each roll to
+    a collective-permute touching only the true graph neighbors). With a
+    mesh axis name the shift IS a ``ppermute`` (comm='axis', inside
+    shard_map): ring gossip costs 2 neighbor transfers instead of a K-way
+    gather, in either lowering.
     """
     if not topo.offsets:
         if topo.K == 1:
@@ -202,42 +240,38 @@ def gossip_roll(params: PyTree, topo: Topology) -> PyTree:
     def mix(x):
         acc = (topo.self_weight * x.astype(jnp.float32))
         for s, w in zip(topo.offsets, topo.offset_weights):
-            acc = acc + w * jnp.roll(x, -s, axis=0).astype(jnp.float32)
+            acc = acc + w * shift_worker(x, s, topo.K,
+                                         axis_name).astype(jnp.float32)
         return acc.astype(x.dtype)
 
     return jax.tree_util.tree_map(mix, params)
 
 
-def gossip_stacked(params: PyTree, topo: Topology, cfg: DAdamConfig) -> PyTree:
-    if cfg.mixing == "dense" or not topo.offsets:
-        return gossip_dense(params, topo.weights)
-    return gossip_roll(params, topo)
-
-
-# ----------------------------- axis gossip ---------------------------------
+def gossip_roll(params: PyTree, topo: Topology) -> PyTree:
+    """comm='stacked' spelling of :func:`gossip_shift` (kept as the
+    reference oracle the kernel/axis variants are pinned against)."""
+    return gossip_shift(params, topo)
 
 
 def gossip_axis(params: PyTree, topo: Topology, axis_name: str) -> PyTree:
-    """Gossip over a mesh axis, for use *inside* shard_map.
-
-    Each device-group along ``axis_name`` is one worker; exchanges use
-    ppermute along the graph offsets.
-    """
+    """comm='axis' spelling of :func:`gossip_shift`, for use inside
+    ``shard_map`` with one worker per slot of ``axis_name``."""
     if topo.K == 1:
         return params
-    if not topo.offsets:
-        raise ValueError("axis gossip needs a shift-invariant topology")
-    K = topo.K
+    return gossip_shift(params, topo, axis_name)
 
-    def mix(x):
-        acc = topo.self_weight * x.astype(jnp.float32)
-        for s, w in zip(topo.offsets, topo.offset_weights):
-            perm = [((k + s) % K, k) for k in range(K)]  # src -> dst
-            recv = jax.lax.ppermute(x, axis_name, perm)
-            acc = acc + w * recv.astype(jnp.float32)
-        return acc.astype(x.dtype)
 
-    return jax.tree_util.tree_map(mix, params)
+def gossip(params: PyTree, topo: Topology, cfg: DAdamConfig) -> PyTree:
+    """The comm dispatch both backends' pytree paths share."""
+    if cfg.comm == "axis":
+        return gossip_axis(params, topo, cfg.axis_name)
+    if cfg.mixing == "dense" or not topo.offsets:
+        return gossip_dense(params, topo.weights)
+    return gossip_shift(params, topo)
+
+
+# backward-compatible name (pre-unification callers: baselines, tests)
+gossip_stacked = gossip
 
 
 # -------------------- packed-resident gossip (pallas) ----------------------
@@ -245,18 +279,32 @@ def gossip_axis(params: PyTree, topo: Topology, axis_name: str) -> PyTree:
 
 def gossip_packed(buf: jax.Array, topo: Topology, cfg: DAdamConfig
                   ) -> jax.Array:
-    """Gossip directly on the resident stacked (K, rows, LANE) buffer.
+    """Gossip directly on the resident packed buffer — the state never
+    leaves the (K, rows, LANE) layout in either comm mode.
 
-    Shift-invariant graphs dispatch to the fused Pallas mixing kernel (one
-    VMEM pass, no rolled intermediates); dense/non-shift topologies — and
-    graphs too dense to keep every neighbor block in VMEM — fall back to
-    the mixing einsum over the worker dim of the buffer. Either way the
-    state never leaves the packed layout."""
+    comm='stacked': shift-invariant graphs dispatch to the fused Pallas
+    mixing kernel (one VMEM pass, no rolled intermediates); dense/non-shift
+    topologies — and graphs too dense to keep every neighbor block in VMEM
+    — fall back to the mixing einsum over the worker dim of the buffer.
+
+    comm='axis' (inside shard_map, ``buf`` is this worker's (1, rows, LANE)
+    shard): each offset is a ``ppermute`` of the packed row-block over the
+    worker axis, accumulated in f32 — the wire carries exactly one packed
+    neighbor block per graph offset."""
     from repro.kernels import ops
     from repro.kernels.gossip import MAX_FUSED_DEGREE
 
     if topo.K == 1:
         return buf
+    if cfg.comm == "axis":
+        if not topo.offsets:
+            raise ValueError("comm='axis' gossip needs a shift-invariant "
+                             "topology")
+        acc = topo.self_weight * buf.astype(jnp.float32)
+        for s, w in zip(topo.offsets, topo.offset_weights):
+            acc = acc + w * shift_worker(buf, s, topo.K,
+                                         cfg.axis_name).astype(jnp.float32)
+        return acc.astype(buf.dtype)
     if (cfg.mixing == "dense" or not topo.offsets
             or len(topo.offsets) > MAX_FUSED_DEGREE):
         W = jnp.asarray(topo.weights, jnp.float32)
@@ -331,23 +379,29 @@ class PackedDAdamState:
                    state.moments.count, spec, spec_m)
 
 
-def grads_buffer(grads: Any, spec: packing.PackSpec,
-                 dtype: Any) -> jax.Array:
+def grads_buffer(grads: Any, spec: packing.PackSpec, dtype: Any,
+                 like_shape: Optional[Tuple[int, ...]] = None) -> jax.Array:
     """Admit gradients in either form at the step boundary: an already
     packed ``(K, rows, 128)`` buffer passes through untouched (the
     steady-state path — differentiate the loss through ``packing.unpack``
     and AD's transpose delivers grads packed for free); a pytree —
     including a bare array for single-leaf parameter trees — is packed
-    once here as a convenience."""
+    once here as a convenience.
+
+    ``like_shape`` is the resident parameter buffer's shape; under
+    comm='axis' it is the per-shard ``(K_local, rows, 128)`` shape inside
+    shard_map (the spec keeps the *global* K), so buffer grads are checked
+    against it rather than against ``spec.buf_shape()``."""
+    want = tuple(like_shape) if like_shape is not None else spec.buf_shape()
     if isinstance(grads, jax.Array):
-        if tuple(grads.shape) == spec.buf_shape():
+        if tuple(grads.shape) == want:
             return grads.astype(dtype)
         if len(spec.shapes) == 1 and tuple(grads.shape) == spec.shapes[0]:
             # bare-array gradient of a single-leaf parameter tree
             return packing.pack(grads, spec, dtype=dtype)
         raise ValueError(
             f"packed grads shape {tuple(grads.shape)} != resident "
-            f"buffer {spec.buf_shape()}")
+            f"buffer {want}")
     return packing.pack(grads, spec, dtype=dtype)
 
 
@@ -368,7 +422,8 @@ def _fused_local_packed(state: PackedDAdamState, grads: Any,
     packing. Returns (params_buf, m_buf, v_buf, count)."""
     from repro.kernels import ops
 
-    gbuf = grads_buffer(grads, state.spec, state.buf.dtype)
+    gbuf = grads_buffer(grads, state.spec, state.buf.dtype,
+                        like_shape=state.buf.shape)
     po, mo, vo = ops.fused_adam(
         state.buf, gbuf, state.m, state.v,
         eta=cfg.eta, beta1=cfg.beta1, beta2=cfg.beta2, tau=cfg.tau,
@@ -395,8 +450,11 @@ def step(
     topo: Topology,
     cfg: DAdamConfig,
 ) -> "DAdamState | PackedDAdamState":
-    """One iteration of Alg. 1 (stacked mode) with the communication-skip
-    condition evaluated in-graph (lax.cond keeps a single jitted step).
+    """One iteration of Alg. 1 with the communication-skip condition
+    evaluated in-graph (lax.cond keeps a single jitted step). Under
+    comm='axis' this function is traced inside shard_map (one worker per
+    mesh slot) — the code is identical; only the worker shifts lower
+    differently.
 
     Packed-resident states (pallas backend) never leave the (K, rows, 128)
     layout: fused-Adam and the gossip kernel consume the buffers directly.
@@ -406,10 +464,10 @@ def step(
         return _step_packed(state, grads, topo, cfg)
     half, mom = local_update(state.params, grads, state.moments, cfg)
     if cfg.period == 1:
-        return DAdamState(gossip_stacked(half, topo, cfg), mom)
+        return DAdamState(gossip(half, topo, cfg), mom)
 
     def comm(x):
-        return gossip_stacked(x, topo, cfg)
+        return gossip(x, topo, cfg)
 
     do_comm = (mom.count % cfg.period) == 0
     new_params = jax.lax.cond(do_comm, comm, lambda x: x, half)
@@ -452,7 +510,7 @@ def round_step(
         return DAdamState(half, mom), ()
 
     inner, _ = jax.lax.scan(body, state, batches)
-    return DAdamState(gossip_stacked(inner.params, topo, cfg), inner.moments)
+    return DAdamState(gossip(inner.params, topo, cfg), inner.moments)
 
 
 def consensus_error(params_stacked: PyTree) -> jax.Array:

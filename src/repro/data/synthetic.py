@@ -14,7 +14,7 @@ Everything is jax.random-based, deterministic in (seed, worker, step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ vmap-per-worker semantics of the reference CD-Adam encode path.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

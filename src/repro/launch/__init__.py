@@ -4,7 +4,8 @@ NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
 fresh process (python -m repro.launch.dryrun).
 """
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                               make_host_mesh, make_production_mesh, n_chips)
+                               make_host_mesh, make_production_mesh,
+                               make_worker_mesh, n_chips)
 
-__all__ = ["make_production_mesh", "make_host_mesh", "n_chips",
-           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_worker_mesh",
+           "n_chips", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -5,18 +5,16 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # jax locks the device count at first init. Do not reorder.
 
 import argparse
-import contextlib
 import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.analysis.hlo import analyze, collective_bytes, collective_counts
+from repro.analysis.hlo import analyze
 from repro.analysis.roofline import from_artifact, model_flops_for
 from repro.configs import (INPUT_SHAPES, SKIPS, get_arch, list_archs)
 from repro.configs.base import ArchConfig, InputShape

@@ -27,5 +27,16 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_worker_mesh(workers: int, *, model: int = 1,
+                     axis_name: str = "worker"):
+    """Mesh for comm='axis' decentralized execution: one slot of
+    ``axis_name`` per worker (the optimizer's ppermute gossip runs over
+    it), optionally crossed with an inner 'model' axis for tensor
+    sharding within each worker."""
+    if model > 1:
+        return jax.make_mesh((workers, model), (axis_name, "model"))
+    return jax.make_mesh((workers,), (axis_name,))
+
+
 def n_chips(mesh) -> int:
     return mesh.devices.size

@@ -9,6 +9,13 @@ sharding:
   stacked   ('data',) | ('pod','data')   [('model',)]
   pods      () | ('pod',)                [('data',), ('model',)]   (FSDP in-pod)
   global    ()                           [('pod','data'), ('model',)] (full FSDP)
+  axis      ('worker',)                  [('model',)] when present
+
+'axis' is the comm='axis' device-parallel optimizer mode: the mesh carries
+a dedicated 'worker' axis (launch.mesh.make_worker_mesh) and the optimizer
+step runs per-shard inside shard_map, gossiping with ppermute over it —
+``worker_state_shardings`` below places an optimizer-state pytree (packed
+or reference layout) on such a mesh.
 
 Inner dims are assigned greedily: largest axis group gets the largest
 still-unassigned dim divisible by its size (megatron column/row sharding
@@ -25,11 +32,28 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, InputShape
+from repro.configs.base import ArchConfig
 
 PyTree = Any
 
 _LAYER_STACK_KEYS = ("layers", "enc_layers", "dec_layers")
+
+WORKER_AXIS = "worker"  # the comm='axis' mesh axis name
+
+
+def worker_state_shardings(mesh: Mesh, tree: PyTree, K: int, *,
+                           axis_name: str = WORKER_AXIS) -> PyTree:
+    """NamedShardings for a comm='axis' optimizer state (or grads/batch
+    stack): every leaf whose leading dim is the worker count K goes on the
+    worker mesh axis; scalars (e.g. the step counter) and worker-free
+    leaves are replicated. Works for both the reference pytree layout and
+    the packed-resident (K, rows, 128) buffers."""
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 1 and shape[0] == K:
+            return NamedSharding(mesh, P(axis_name))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,17 +99,32 @@ def make_plan(arch: ArchConfig, mesh: Mesh, *, multi_pod: bool,
         inner = tuple(tuple(g) if isinstance(g, tuple) else (g,)
                       for g in inner)
         batch_axes = ("pod", "data") if multi_pod else ("data",)
+    elif mode == "axis":
+        # comm='axis': a dedicated worker axis; inner tensor sharding on
+        # 'model' when the mesh has one (make_worker_mesh(model=...))
+        if WORKER_AXIS not in mesh.shape:
+            raise ValueError(
+                f"mode='axis' needs a {WORKER_AXIS!r} mesh axis; "
+                f"mesh has {tuple(mesh.shape)}")
+        worker = (WORKER_AXIS,)
+        inner = ((("model",),) if "model" in mesh.shape else ())
+        batch_axes = ()
     else:
         raise ValueError(f"unknown worker mode {mode!r}")
     # serving: no worker dim; small archs keep params TP-only, big archs FSDP
     if mode == "stacked":
         serve_groups: Tuple[Tuple[str, ...], ...] = (("model",),)
+    elif mode == "axis":
+        serve_groups = (("model",),) if "model" in mesh.shape else ()
     else:
         serve_groups = ((("pod", "data") if multi_pod else ("data",)),
                         ("model",))
         serve_groups = tuple(tuple(g) if isinstance(g, tuple) else (g,)
                              for g in serve_groups)
-    serve_batch = ("pod", "data") if multi_pod else ("data",)
+    if mode == "axis":
+        serve_batch: Tuple[str, ...] = (WORKER_AXIS,)
+    else:
+        serve_batch = ("pod", "data") if multi_pod else ("data",)
     return ShardingPlan(mesh, mode, multi_pod, worker, inner, batch_axes,
                         serve_groups, serve_batch, arch.model)
 

@@ -15,10 +15,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import restore, save
+from repro.checkpoint import save
 from repro.configs import get_arch, get_reduced, list_archs
 from repro.core import make_optimizer
 from repro.data import lm_batch
+from repro.launch.mesh import make_worker_mesh
 from repro.models import build_model
 from repro.train import DecentralizedTrainer
 
@@ -63,6 +64,13 @@ def main() -> None:
                     choices=["reference", "pallas"],
                     help="optimizer execution backend (pallas = fused "
                          "kernels; interpret mode off-TPU)")
+    ap.add_argument("--comm", default="stacked",
+                    choices=["stacked", "axis"],
+                    help="worker execution: 'stacked' runs the worker dim "
+                         "in one program; 'axis' shards it over a "
+                         "'worker' mesh axis (one device group per "
+                         "worker) and gossips with ppermute inside "
+                         "shard_map — needs >= --workers devices")
     ap.add_argument("--skew", type=float, default=0.5,
                     help="non-IID-ness of worker shards")
     ap.add_argument("--ckpt", default="")
@@ -73,10 +81,19 @@ def main() -> None:
     arch = get_arch(args.arch) if args.full else get_reduced(args.arch)
     cfg = arch.model
     api = build_model(cfg)
+    mesh = None
+    if args.comm == "axis":
+        if jax.device_count() < args.workers:
+            raise SystemExit(
+                f"--comm axis needs one device per worker: have "
+                f"{jax.device_count()} devices for --workers "
+                f"{args.workers} (on CPU, set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.workers})")
+        mesh = make_worker_mesh(args.workers)
     opt = make_optimizer(args.optimizer, K=args.workers, eta=args.eta,
                          period=args.period, topology=args.topology,
                          gamma=args.gamma, compressor=args.compressor,
-                         backend=args.backend)
+                         backend=args.backend, comm=args.comm, mesh=mesh)
     trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt)
     params = api.init(jax.random.PRNGKey(0))
     state = trainer.init(params)
@@ -84,7 +101,11 @@ def main() -> None:
     print(f"[train] {args.arch} ({'full' if args.full else 'reduced'}) "
           f"N={n_params/1e6:.1f}M x {args.workers} workers "
           f"opt={args.optimizer} p={args.period} "
-          f"topo={args.topology} backend={args.backend}")
+          f"topo={args.topology} backend={args.backend} comm={args.comm}")
+    if args.comm == "axis":
+        print(f"[train] worker mesh: {tuple(mesh.shape.items())} — state "
+              f"sharded one worker per slot; gossip = ppermute over "
+              f"'worker'")
     if args.backend == "pallas":
         # packed-resident state: params + moments live in the stacked
         # (K, rows, 128) kernel layout across steps; grads are produced

@@ -10,7 +10,7 @@ and is selected with ``impl='pallas'`` (validated in interpret mode).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

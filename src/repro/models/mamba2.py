@@ -13,7 +13,7 @@ State is O(H*P*N) independent of context — zamba2 runs long_500k natively.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,14 +14,12 @@ Batch layouts by family (all int32 tokens):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import hybrid, rwkv6, transformer, vlm, whisper
-from repro.models import attention
 
 PyTree = Any
 

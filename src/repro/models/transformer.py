@@ -12,7 +12,6 @@ Three entry points per the serving/training split:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention, common, transformer

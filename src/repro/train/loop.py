@@ -14,9 +14,9 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import DecentralizedOptimizer, is_packed_state, make_optimizer
+from repro.core import DecentralizedOptimizer, is_packed_state
+from repro.core.api import shard_over_workers
 from repro.core.dadam import consensus_error, mean_params
 from repro.kernels import pack as packing
 
@@ -52,6 +52,12 @@ class DecentralizedTrainer:
 
     loss_fn(params, batch) -> scalar, evaluated per worker via vmap; the
     batch carries a leading K dim on every leaf.
+
+    With a comm='axis' optimizer (``make_optimizer(comm='axis', mesh=...)``)
+    the state lives sharded over the worker mesh axis: ``opt.init`` places
+    it there, the jitted step's shard_map keeps it there, and ``fit``
+    device_puts each batch's worker dim onto the axis so the per-worker
+    grads are computed where the state shard lives.
     """
 
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
@@ -88,6 +94,15 @@ class DecentralizedTrainer:
         stacked = stack_params(params, self.opt.K)
         return self.opt.init(stacked)
 
+    def _place_batch(self, batch: PyTree) -> PyTree:
+        """comm='axis': ship each leaf's worker dim onto the worker mesh
+        axis (no-op for stacked-comm optimizers)."""
+        if self.opt.mesh is None:
+            return batch
+        return shard_over_workers(batch, self.opt.mesh, self.opt.K,
+                                  getattr(self.opt.cfg, "axis_name",
+                                          "worker"))
+
     def comm_mb_per_round(self, state) -> float:
         return self.opt.comm_bytes_per_round(
             self.opt.params_of(state)) / 1e6
@@ -100,7 +115,7 @@ class DecentralizedTrainer:
         mb_per_round = None
         t0 = time.perf_counter()
         for t in range(steps):
-            batch = next(batch_iter)
+            batch = self._place_batch(next(batch_iter))
             state, loss = self._step(state, batch)
             if (t + 1) % self.opt.cfg.period == 0:
                 comm_rounds += 1

@@ -11,8 +11,6 @@ kernel bodies that compile to Mosaic on TPU. Covers:
 * 10-step make_optimizer parity for d-adam and cd-adam (jitted, in-graph
   comm-skip cond), and config validation of the backend switch.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,7 +18,7 @@ import pytest
 
 from repro.core import cdadam, dadam, make_optimizer, make_topology
 from repro.core.compression import sign
-from repro.core.dadam import AdamMoments, DAdamConfig
+from repro.core.dadam import DAdamConfig
 from repro.kernels import ops
 from repro.kernels import pack as packing
 

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import cdadam, dadam, make_optimizer, make_topology
+from repro.core import cdadam, make_optimizer, make_topology
 from repro.core.cdadam import CDAdamConfig
-from repro.core.compression import identity, make_compressor, sign
+from repro.core.compression import identity, sign
 from repro.core.dadam import consensus_error, mean_params
 
 KEY = jax.random.PRNGKey(0)

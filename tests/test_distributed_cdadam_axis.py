@@ -1,5 +1,8 @@
-"""CD-Adam axis variant (pods mode): comm_round_axis under shard_map must
-match the stacked implementation — run in a subprocess with 4 host devices.
+"""CD-Adam comm='axis' (unified dispatch): the reference-backend step
+under shard_map — encoded payload ppermuted over the worker mesh axis —
+must match the stacked implementation. Runs in a subprocess with 4 forced
+host devices. (The pre-unification ``comm_round_axis`` duplicate is gone;
+this pins the single code path that replaced it.)
 """
 import os
 import subprocess
@@ -14,56 +17,36 @@ _SCRIPT = textwrap.dedent("""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
 
-    from repro.core import cdadam
-    from repro.core.cdadam import CDAdamConfig, CDAdamAxisState
-    from repro.core.compression import sign
-    from repro.core.topology import make_topology
+    from repro.core import make_optimizer
 
     K, d = 4, 64
-    mesh = jax.make_mesh((4,), ("pod",))
-    topo = make_topology("ring", K)
-    cfg = CDAdamConfig(eta=0.01, period=1, gamma=0.4, tau=1e-3)
-    comp = sign()
-    key = jax.random.PRNGKey(0)
-    x_half = jax.random.normal(key, (K, d))
-    hat_self = jax.random.normal(jax.random.fold_in(key, 1), (K, d)) * 0.3
-    # stacked hat_nbrs convention: hat_nbrs[i][k] = hat_self[(k+s_i) % K]
-    hat_nbrs = tuple(jnp.roll(hat_self, -s, axis=0) for s in topo.offsets)
+    mesh = jax.make_mesh((4,), ("worker",))
+    params = {"x": jax.random.normal(jax.random.PRNGKey(0), (K, d))}
 
-    # ---- stacked reference --------------------------------------------------
-    from repro.core.cdadam import CDAdamState, _comm_round
-    from repro.core.dadam import AdamMoments
-    mom = AdamMoments(jnp.zeros((K, d)), jnp.zeros((K, d)),
-                      jnp.zeros((), jnp.int32))
-    ref = _comm_round(CDAdamState({"x": x_half}, mom, {"x": hat_self},
-                                  tuple({"x": hn} for hn in hat_nbrs)),
-                      topo, cfg, comp)
+    stacked = make_optimizer("cd-adam", K=K, eta=0.01, period=1,
+                             gamma=0.4, tau=1e-3, compressor="sign")
+    axis = make_optimizer("cd-adam", K=K, eta=0.01, period=1,
+                          gamma=0.4, tau=1e-3, compressor="sign",
+                          comm="axis", mesh=mesh)
+    s0 = stacked.init(jax.tree_util.tree_map(jnp.copy, params))
+    s1 = axis.init(jax.tree_util.tree_map(jnp.copy, params))
+    for t in range(3):
+        g = jax.tree_util.tree_map(
+            lambda x: 0.3 * x + 0.02 * (t + 1), stacked.params_of(s0))
+        s0 = jax.jit(lambda s, g: stacked.step(s, g))(s0, g)
+        s1 = jax.jit(lambda s, g: axis.step(s, g))(s1, g)
 
-    # ---- axis variant under shard_map --------------------------------------
-    def axis_round(xh, hs, hn0, hn1):
-        st = CDAdamAxisState({"x": xh[0]}, None, {"x": hs[0]},
-                             ({"x": hn0[0]}, {"x": hn1[0]}))
-        out = cdadam.comm_round_axis(st, topo, cfg, comp, "pod")
-        return (out.params["x"][None], out.hat_self["x"][None],
-                out.hat_nbrs[0]["x"][None], out.hat_nbrs[1]["x"][None])
-
-    got = shard_map(axis_round, mesh=mesh,
-                    in_specs=(P("pod"), P("pod"), P("pod"), P("pod")),
-                    out_specs=(P("pod"), P("pod"), P("pod"), P("pod")))(
-        x_half, hat_self, hat_nbrs[0], hat_nbrs[1])
-
-    np.testing.assert_allclose(np.asarray(got[0]),
-                               np.asarray(ref.params["x"]),
+    np.testing.assert_allclose(np.asarray(s1.params["x"]),
+                               np.asarray(s0.params["x"]),
                                rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(got[1]),
-                               np.asarray(ref.hat_self["x"]),
+    np.testing.assert_allclose(np.asarray(s1.hat_self["x"]),
+                               np.asarray(s0.hat_self["x"]),
                                rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(got[2]),
-                               np.asarray(ref.hat_nbrs[0]["x"]),
-                               rtol=1e-5, atol=1e-6)
+    for h1, h0 in zip(s1.hat_nbrs, s0.hat_nbrs):
+        np.testing.assert_allclose(np.asarray(h1["x"]),
+                                   np.asarray(h0["x"]),
+                                   rtol=1e-5, atol=1e-6)
     print("OK cdadam_axis_matches_stacked")
 """)
 

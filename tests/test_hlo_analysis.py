@@ -1,10 +1,8 @@
 """The trip-count-aware HLO analyzer (roofline input correctness)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
-from repro.analysis.hlo import analyze, collective_bytes, full_cost
+from repro.analysis.hlo import collective_bytes, full_cost
 
 
 def _compile(fn, *sds):

@@ -1,7 +1,5 @@
 """Infrastructure: checkpointing, data pipeline, metrics, train loop,
-config registry, axis-gossip variant."""
-import os
-
+config registry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,8 +7,7 @@ import pytest
 
 from repro.checkpoint import restore, save
 from repro.configs import get_arch, get_reduced, list_archs
-from repro.core import make_optimizer, make_topology
-from repro.core.dadam import gossip_axis, gossip_roll
+from repro.core import make_optimizer
 from repro.data import (ctr_batch, image_batch, lm_batch, make_ctr_task)
 from repro.models.deepfm import (deepfm_loss, init_deepfm, init_resnet20,
                                  resnet20_logits, resnet20_loss,
@@ -108,12 +105,8 @@ class TestMetrics:
         assert accuracy(logits, jnp.asarray([0, 1])) == 1.0
 
 
-class TestAxisGossip:
-    def test_axis_matches_roll_under_shard_map(self):
-        """pods-mode gossip (ppermute inside shard_map) == stacked roll."""
-        if jax.device_count() < 2:
-            pytest.skip("needs >=2 devices")
-        import jax.experimental.shard_map as shmap  # noqa
+# comm='axis' gossip/step parity lives in tests/test_comm_axis.py (in-
+# process, multi-device) and tests/test_distributed*.py (subprocess).
 
 
 class TestConfigs:

@@ -1,10 +1,7 @@
 """Model substrate: decode-vs-forward consistency per family, attention
 implementations agree, MoE routing invariants."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig

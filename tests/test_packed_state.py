@@ -27,7 +27,7 @@ import pytest
 from repro.checkpoint import restore, save
 from repro.core import (cdadam, dadam, is_packed_state, make_optimizer,
                         make_topology)
-from repro.core.cdadam import CDAdamConfig, PackedCDAdamState
+from repro.core.cdadam import CDAdamConfig
 from repro.core.dadam import DAdamConfig, PackedDAdamState, gossip_roll
 from repro.kernels import ops
 from repro.kernels import pack as packing

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_reduced, list_archs
-from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.configs.base import INPUT_SHAPES
 from repro.models import build_model
 from repro.serve import (cache_spec, effective_config, greedy_generate)
 

@@ -2,8 +2,6 @@
 instantiate the REDUCED variant (<=2 layers, d_model<=512, <=4 experts),
 run one forward/train step on CPU, assert output shapes + no NaNs.
 Also exercises one prefill+decode serve step per arch."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import pytest

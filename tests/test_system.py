@@ -10,7 +10,6 @@ CPU-scale synthetic tasks:
      sparse/categorical CTR data at the paper's eta — Section 1's premise.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -7,8 +7,8 @@ bound) so the suite runs with stdlib pytest only.
 import numpy as np
 import pytest
 
-from repro.core.topology import (exponential, fully_connected, make_topology,
-                                 ring, spectral_gap, torus)
+from repro.core.topology import (exponential, fully_connected,
+                                 make_topology, ring)
 
 
 @pytest.mark.parametrize("name", ["ring", "fully_connected", "exponential",
