@@ -13,8 +13,13 @@ across four execution paths:
   packed buffer is sharded one worker per slot of a 'worker' mesh and the
   step runs per-shard inside shard_map with ppermute gossip — this is the
   per-worker wall clock the paper's linear-speedup claim is about (needs
-  >= K devices; when invoked as __main__ on CPU the script forces K host
-  devices before jax initializes), and
+  >= K devices; when invoked as __main__ on CPU the script forces enough
+  host devices before jax initializes),
+* ``pallas_axis2d``    — comm='axis' on the 2D (worker x model) mesh:
+  each worker is an M-device model-parallel group holding (1, rows/M, 128)
+  row shards of the packed state; gossip still crosses only the worker
+  axis and CD-Adam's compression scales psum over 'model' (needs K * M
+  devices), and
 * ``pallas_repack``    — the PR-1 dispatch that re-packs the pytree state
   around the kernels every step (kept precisely to expose what residency
   saves).
@@ -42,20 +47,28 @@ import sys
 import time
 
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
-    # the pallas_axis path needs one device per worker; opt into forced
-    # host devices BEFORE jax initializes (no-op on accelerator hosts or
-    # when the caller already set XLA_FLAGS)
-    _workers = 8
-    for _i, _a in enumerate(sys.argv):
-        try:
-            if _a.startswith("--workers="):
-                _workers = int(_a.split("=", 1)[1])
-            elif _a == "--workers" and _i + 1 < len(sys.argv):
-                _workers = int(sys.argv[_i + 1])
-        except ValueError:
-            break  # malformed value: leave it to argparse's usage error
+    # the pallas_axis path needs one device per worker (and pallas_axis2d
+    # one per worker x model shard); opt into forced host devices BEFORE
+    # jax initializes (no-op on accelerator hosts or when the caller
+    # already set XLA_FLAGS)
+    _workers, _mp = 8, 2
+
+    def _argval(flag: str, default: int) -> int:
+        val = default
+        for _i, _a in enumerate(sys.argv):
+            try:
+                if _a.startswith(flag + "="):
+                    val = int(_a.split("=", 1)[1])
+                elif _a == flag and _i + 1 < len(sys.argv):
+                    val = int(sys.argv[_i + 1])
+            except ValueError:
+                break  # malformed value: leave it to argparse's error
+        return val
+
+    _workers = _argval("--workers", _workers)
+    _mp = _argval("--model-parallel", _mp)
     os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={_workers}")
+        f"--xla_force_host_platform_device_count={_workers * max(_mp, 1)}")
 
 import jax
 import jax.numpy as jnp
@@ -113,7 +126,8 @@ def _repack_state_and_step(kind: str, opt, params):
     return state, jax.jit(lambda s, g: cdadam.step(s, g, topo, cfg, comp))
 
 
-def bench_kind(kind: str, K: int, size: int, period: int) -> dict:
+def bench_kind(kind: str, K: int, size: int, period: int,
+               model_parallel: int = 2) -> dict:
     key = jax.random.PRNGKey(0)
     params = make_params(key, K, size)
     grads = jax.tree_util.tree_map(lambda x: 0.1 * x + 0.01, params)
@@ -165,6 +179,30 @@ def bench_kind(kind: str, K: int, size: int, period: int) -> dict:
         rec["pallas_axis_skipped"] = (
             f"needs {K} devices, have {jax.device_count()}")
 
+    # pallas axis 2D: the (worker x model) mesh — each worker an M-device
+    # model-parallel group over row shards of the packed state. The grads
+    # are packed against the 2D state's own row-sharded spec.
+    M = model_parallel
+    if M > 1 and jax.device_count() >= K * M:
+        mesh2 = make_worker_mesh(K, model_parallel=M)
+        aopt2 = make_optimizer(kind, K=K, eta=1e-3, period=period,
+                               backend="pallas", comm="axis", mesh=mesh2)
+        astate2 = aopt2.init(jax.tree_util.tree_map(jnp.copy, params))
+        gbuf2 = packing.pack(grads, astate2.spec, dtype=astate2.buf.dtype)
+        gbuf2 = jax.device_put(gbuf2, astate2.buf.sharding)
+        us_2d = time_stepped(jax.jit(lambda s, g: aopt2.step(s, g)),
+                             astate2, gbuf2)
+        rec["pallas_axis2d_us_per_step"] = round(us_2d, 1)
+        emit(f"fused_step/{kind}_pallas_axis2d", us_2d,
+             f"{K}x{M}-device shard_map; "
+             f"{n * 4 / (us_2d / 1e6) / 1e9:.2f}GB/s param-touch")
+    else:
+        rec["pallas_axis2d_us_per_step"] = None
+        rec["pallas_axis2d_skipped"] = (
+            "disabled (--model-parallel <= 1)" if M <= 1 else
+            f"needs {K * M} devices (model_parallel={M}), "
+            f"have {jax.device_count()}")
+
     # pallas repack: the pre-residency dispatch, pack/unpack every step
     rstate, rstep = _repack_state_and_step(kind, popt, params)
     us_rep = time_stepped(rstep, rstate, grads)
@@ -185,12 +223,14 @@ def bench_kind(kind: str, K: int, size: int, period: int) -> dict:
 
 
 def main(workers: int = 8, size: int = 1 << 16, period: int = 1,
-         out: str = "") -> dict:
+         out: str = "", model_parallel: int = 2) -> dict:
     record = {"benchmark": "fused_step",
               "jax_version": jax.__version__,
               "platform": jax.default_backend(),
               "device_count": jax.device_count(),
-              "records": [bench_kind(k, workers, size, period)
+              "model_parallel": model_parallel,
+              "records": [bench_kind(k, workers, size, period,
+                                     model_parallel)
                           for k in ("d-adam", "cd-adam")]}
     print("JSON " + json.dumps(record))
     if out:
@@ -208,8 +248,13 @@ if __name__ == "__main__":
                          "interpret mode)")
     ap.add_argument("--period", type=int, default=1,
                     help="p=1 so the timed step includes communication")
+    ap.add_argument("--model-parallel", type=int, default=2,
+                    help="inner model-parallel group size M for the "
+                         "pallas_axis2d path (needs workers * M devices; "
+                         "0/1 disables the 2D timing)")
     ap.add_argument("--out", default="",
                     help="also write the JSON record to this path "
                          "(CI uploads it as the bench-smoke artifact)")
     args = ap.parse_args()
-    main(args.workers, args.size, args.period, args.out)
+    main(args.workers, args.size, args.period, args.out,
+         args.model_parallel)

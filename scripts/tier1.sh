@@ -4,15 +4,18 @@
 #   bash scripts/tier1.sh             # pytest -x -q, slow tests deselected
 #   bash scripts/tier1.sh -m ""       # override: run everything
 #
-# Forces the host-CPU backend with 8 virtual devices so the sharding /
-# collective paths (shard_map, ppermute gossip, comm='axis') are exercised
-# without accelerators; Pallas kernels run via interpret mode.
+# Forces the host-CPU backend with 8 virtual devices (override the count
+# with REPRO_HOST_DEVICES — the CI device matrix runs 8 and 16 so both
+# square and rectangular worker x model mesh factorizations are
+# exercised) so the sharding / collective paths (shard_map, ppermute
+# gossip, comm='axis', the 2D worker x model mesh) run without
+# accelerators; Pallas kernels run via interpret mode.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
-export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES:-8}${XLA_FLAGS:+ $XLA_FLAGS}"
 
 # Persistent jit-compile cache: the suite's wall clock is dominated by
 # per-test XLA compiles, which are identical run to run. CI persists this

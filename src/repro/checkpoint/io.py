@@ -18,7 +18,10 @@ leaves to host (a comm='axis' state sharded over a worker mesh writes the
 same bytes as its single-device twin), and ``restore`` places every
 restored leaf with the sharding of the corresponding ``like`` leaf — so a
 stacked-comm checkpoint restores straight onto a comm='axis' worker mesh
-and vice versa.
+and vice versa. Packed states are repacked into the *like-state's layout*
+(including the row-sharded ``row_shards=M`` layout of a 2D worker × model
+mesh), so a 1D-mesh checkpoint restores onto a 2D mesh and back,
+bit-identically in the portable leaf values.
 """
 from __future__ import annotations
 
@@ -124,11 +127,14 @@ def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
         def repacked(orig, slot):
             if not _is_packed(orig):
                 return slot
-            # repack, then re-place each buffer with the live state's
-            # sharding (mesh-portable: the checkpoint bytes are layout-
-            # and placement-agnostic)
-            return jax.tree_util.tree_map(
-                _placed_like, type(orig).from_unpacked(slot), orig)
+            # repack INTO THE LIKE-STATE'S LAYOUT (a 2D worker x model
+            # state keeps its packed rows row-sharded M-ways), then
+            # re-place each buffer with the live state's sharding
+            # (mesh-portable: the checkpoint bytes are layout- and
+            # placement-agnostic)
+            repack = type(orig).from_unpacked(
+                slot, row_shards=getattr(orig.spec, "row_shards", 1))
+            return jax.tree_util.tree_map(_placed_like, repack, orig)
 
         return outer_td.unflatten(
             [repacked(orig, slot)

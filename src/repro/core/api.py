@@ -24,6 +24,18 @@ pallas backend each device updates its own (1, rows, 128) shard of the
 resident packed buffer and only packed neighbor row-blocks (or, for
 CD-Adam, the int8 sign payload + per-(worker, leaf) scales) travel over
 the axis.
+
+When the mesh ALSO carries a 'model' axis of size M
+(``launch.mesh.make_worker_mesh(K, model_parallel=M)``), execution goes 2D:
+the packed state is built in the row-sharded layout (``kernels.pack
+row_shards=M``) and partitioned ``P('worker', 'model')`` — each of the
+K × M devices holds a (1, rows/M, 128) block carrying 1/M of every leaf.
+Gossip/payload ppermutes cross ONLY the worker axis (each model column
+exchanges its own row block), grads are computed model-parallel against
+the row-sharded buffer (the trainer's differentiate-through-unpack path;
+XLA inserts the psums), and CD-Adam's per-(worker, leaf) compression
+scales psum their |delta| partials over 'model' so the math stays exactly
+the reference semantics. Requires ``backend='pallas'``.
 """
 from __future__ import annotations
 
@@ -39,6 +51,7 @@ from repro.core.cdadam import CDAdamConfig, PackedCDAdamState
 from repro.core.compression import Compressor, make_compressor
 from repro.core.dadam import DAdamConfig, PackedDAdamState
 from repro.core.topology import Topology, make_topology
+from repro.kernels import pack as _pack
 
 PyTree = Any
 
@@ -52,23 +65,34 @@ def is_packed_state(state: Any) -> bool:
 
 
 def worker_pspec_tree(tree: PyTree, K: int, axis_name: str,
-                      worker_dim: int = 0) -> PyTree:
+                      worker_dim: int = 0,
+                      model_axis: Optional[str] = None) -> PyTree:
     """PartitionSpecs putting each leaf's worker dim (size K at
     ``worker_dim``) on ``axis_name``; scalars and worker-free leaves are
     replicated. ``worker_dim=1`` matches ``round``'s (p, K, ...) batch
-    leaves."""
+    leaves.
+
+    With ``model_axis`` (the 2D worker × model mesh) packed
+    ``(K, rows, 128)`` buffers — recognized by their 3-D lane-aligned
+    shape — additionally put their row dim on the model axis; non-buffer
+    leaves (the scalar count, batch stacks) stay replicated over it."""
     def one(leaf):
         shape = getattr(leaf, "shape", ())
         if len(shape) > worker_dim and shape[worker_dim] == K:
-            return P(*([None] * worker_dim + [axis_name]))
+            entries = [None] * worker_dim + [axis_name]
+            if (model_axis is not None and worker_dim == 0
+                    and _pack.is_packed_buffer_shape(shape, K)):
+                entries.append(model_axis)
+            return P(*entries)
         return P()
     return jax.tree_util.tree_map(one, tree)
 
 
-def shard_over_workers(tree: PyTree, mesh: Any, K: int,
-                       axis_name: str) -> PyTree:
-    """device_put every leaf with its worker dim on the mesh axis."""
-    specs = worker_pspec_tree(tree, K, axis_name)
+def shard_over_workers(tree: PyTree, mesh: Any, K: int, axis_name: str,
+                       model_axis: Optional[str] = None) -> PyTree:
+    """device_put every leaf with its worker dim on the mesh axis (and,
+    for packed buffers on a 2D mesh, the row dim on ``model_axis``)."""
+    specs = worker_pspec_tree(tree, K, axis_name, model_axis=model_axis)
     shardings = jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), specs)
     return jax.device_put(tree, shardings)
@@ -80,7 +104,13 @@ def _with_axis_execution(opt: "DecentralizedOptimizer", mesh: Any,
     worker mesh axis; ``step`` / ``round`` run the unmodified core step
     per-shard inside shard_map (one worker per slot of ``axis_name``), so
     worker shifts lower to ppermute and — for the pallas backend — the
-    fused kernels consume each worker's (1, rows, 128) resident shard."""
+    fused kernels consume each worker's (1, rows, 128) resident shard.
+
+    With ``cfg.model_parallel`` = M > 1 the shard_map runs over the full
+    2D (worker × model) mesh: packed buffers go ``P(worker, model)`` (one
+    (1, rows/M, 128) block per device, the row-sharded pack layout), the
+    scalar count and batch stacks replicate over 'model', and the core
+    step's worker shifts still cross only the worker axis."""
     K = opt.K
     if mesh is None:
         raise ValueError("comm='axis' needs mesh= (a jax Mesh with a "
@@ -89,6 +119,14 @@ def _with_axis_execution(opt: "DecentralizedOptimizer", mesh: Any,
         raise ValueError(
             f"comm='axis' needs mesh axis {axis_name!r} of size K={K}; "
             f"mesh has {dict(mesh.shape)}")
+    M = int(getattr(opt.cfg, "model_parallel", 1))
+    model_axis = (getattr(opt.cfg, "model_axis_name", "model")
+                  if M > 1 else None)
+    if model_axis is not None and (model_axis not in mesh.shape
+                                   or mesh.shape[model_axis] != M):
+        raise ValueError(
+            f"model_parallel={M} needs mesh axis {model_axis!r} of size "
+            f"{M}; mesh has {dict(mesh.shape)}")
     if K > 1 and not opt.topo.offsets:
         # fail at construction, not at first step trace: axis gossip is
         # ppermute along the shift offsets and has no dense fallback
@@ -99,17 +137,22 @@ def _with_axis_execution(opt: "DecentralizedOptimizer", mesh: Any,
     base_init, base_step, base_round = opt.init, opt.step, opt.round
 
     def init(params: PyTree) -> Any:
-        return shard_over_workers(base_init(params), mesh, K, axis_name)
+        return shard_over_workers(base_init(params), mesh, K, axis_name,
+                                  model_axis=model_axis)
 
     def step(state: Any, grads: PyTree) -> Any:
-        state_specs = worker_pspec_tree(state, K, axis_name)
+        state_specs = worker_pspec_tree(state, K, axis_name,
+                                        model_axis=model_axis)
         return shard_map(
             base_step, mesh=mesh,
-            in_specs=(state_specs, worker_pspec_tree(grads, K, axis_name)),
+            in_specs=(state_specs,
+                      worker_pspec_tree(grads, K, axis_name,
+                                        model_axis=model_axis)),
             out_specs=state_specs, check_rep=False)(state, grads)
 
     def round_(state: Any, grad_fn: Callable, batches: Any) -> Any:
-        state_specs = worker_pspec_tree(state, K, axis_name)
+        state_specs = worker_pspec_tree(state, K, axis_name,
+                                        model_axis=model_axis)
         return shard_map(
             lambda s, b: base_round(s, grad_fn, b), mesh=mesh,
             in_specs=(state_specs,
@@ -179,11 +222,23 @@ def make_optimizer(
     comm: str = "stacked",
     mesh: Any = None,
     axis_name: str = "worker",
+    model_axis_name: str = "model",
     **comp_kw,
 ) -> DecentralizedOptimizer:
     topo = make_topology(topology, K)
     kind = kind.lower().replace("_", "-")
     opt: Optional[DecentralizedOptimizer] = None
+
+    # 2D (worker x model) execution is declared by the mesh itself: a
+    # model axis of size M > 1 row-shards the packed state M-ways per
+    # worker. Only the pallas backend has a row dim to shard — under
+    # backend='reference' a model axis on the mesh keeps its pre-2D
+    # meaning (state replicated over it; tensor sharding is the launch
+    # layer's business), so detection is gated on the backend.
+    model_parallel = 1
+    if (comm == "axis" and backend == "pallas" and mesh is not None
+            and hasattr(mesh, "shape")):
+        model_parallel = int(dict(mesh.shape).get(model_axis_name, 1))
 
     if kind in ("d-adam", "dadam", "d-adam-vanilla"):
         if kind == "d-adam-vanilla":
@@ -191,7 +246,9 @@ def make_optimizer(
         cfg = DAdamConfig(eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                           period=period, weight_decay=weight_decay,
                           mixing=mixing, moment_dtype=moment_dtype,
-                          backend=backend, comm=comm, axis_name=axis_name)
+                          backend=backend, comm=comm, axis_name=axis_name,
+                          model_parallel=model_parallel,
+                          model_axis_name=model_axis_name)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=None,
@@ -212,7 +269,9 @@ def make_optimizer(
                            period=period, weight_decay=weight_decay,
                            gamma=gamma, mixing=mixing,
                            moment_dtype=moment_dtype, backend=backend,
-                           comm=comm, axis_name=axis_name)
+                           comm=comm, axis_name=axis_name,
+                           model_parallel=model_parallel,
+                           model_axis_name=model_axis_name)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=comp,

@@ -110,13 +110,16 @@ class PackedCDAdamState:
                            self.hat_nbrs)
 
     @classmethod
-    def from_unpacked(cls, state: CDAdamState) -> "PackedCDAdamState":
+    def from_unpacked(cls, state: CDAdamState, *,
+                      row_shards: int = 1) -> "PackedCDAdamState":
+        """``row_shards=M`` packs into the 2D-mesh row-sharded layout
+        (each leaf split across M shard blocks; see kernels/pack.py)."""
         spec = packing.make_spec(state.params, stacked=True,
                                  block_rows=packing.BLOCK_ROWS,
-                                 leaf_align=True)
+                                 leaf_align=True, row_shards=row_shards)
         spec_m = packing.make_spec(state.moments.m, stacked=True,
                                    block_rows=packing.BLOCK_ROWS,
-                                   leaf_align=True)
+                                   leaf_align=True, row_shards=row_shards)
         return cls(packing.pack(state.params, spec),
                    packing.pack(state.moments.m, spec_m),
                    packing.pack(state.moments.v, spec_m),
@@ -182,7 +185,8 @@ def init(params_stacked: PyTree, cfg: CDAdamConfig,
     state = CDAdamState(params_stacked, init_moments(params_stacked, cfg),
                         zeros, hat_nbrs)
     if cfg.backend == "pallas":
-        return PackedCDAdamState.from_unpacked(state)
+        return PackedCDAdamState.from_unpacked(
+            state, row_shards=cfg.model_parallel)
     return state
 
 
@@ -281,7 +285,16 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
     over the stacked dim (comm='stacked') or a ppermute over the worker
     mesh axis (comm='axis', where the local buffers are one worker's
     (1, rows, 128) shard) — still exactly the compressed byte count on
-    the wire."""
+    the wire.
+
+    On a 2D (worker × model) mesh (``cfg.model_parallel`` = M > 1, traced
+    inside shard_map with both axes bound) the local buffers are one
+    (worker, model) shard's (1, rows/M, 128) block of the row-sharded
+    layout: ``leaf_row_ranges`` hands out the shard-invariant local leaf
+    slices, and the sign-compress scale reduction psums its |delta|
+    partial sums over the model axis — compression stays per
+    (worker, leaf) with the exact reference semantics, while the ppermute
+    payload per device shrinks to that device's 1/M row block."""
     from repro.kernels import ops
 
     x_new = ops.consensus_mix(state_half.buf, state_half.hat_buf,
@@ -289,17 +302,22 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
                               cfg.gamma)
 
     spec = state_half.spec
+    # local view: the per-shard row ranges / row count (== the full buffer
+    # when not row-sharded)
     ranges = packing.leaf_row_ranges(spec)
+    lrows = spec.local_rows
+    maxis = (cfg.model_axis_name
+             if getattr(cfg, "model_parallel", 1) > 1 else None)
     q_parts, scale_cols, hat_parts = [], [], []
     for (r0, r1), size in zip(ranges, spec.sizes):
         q_l, s_l, h_l = ops.sign_compress_stacked(
             x_new[:, r0:r1], state_half.hat_buf[:, r0:r1],
-            n_true=size if size else None)
+            n_true=size if size else None, reduce_axis=maxis)
         q_parts.append(q_l)
         scale_cols.append(s_l)
         hat_parts.append(h_l)
-    q_buf = jnp.concatenate(q_parts, axis=1)                 # (K, rows, 128)
-    scales = jnp.stack(scale_cols, axis=1)                   # (K, L)
+    q_buf = jnp.concatenate(q_parts, axis=1)           # (K, local rows, 128)
+    scales = jnp.stack(scale_cols, axis=1)             # (K, L)
     new_hat_buf = jnp.concatenate(hat_parts, axis=1)
 
     # broadcast the per-(worker, leaf) scale over each leaf's row range
@@ -310,7 +328,7 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
         q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
         sc_recv = dadam.shift_worker(scales, shift, topo.K, axis)
         sc_rows = jnp.repeat(sc_recv, rows_per_leaf, axis=1,
-                             total_repeat_length=spec.rows)   # (K, rows)
+                             total_repeat_length=lrows)       # (K, rows)
         return hn + (sc_rows[:, :, None]
                      * q_recv.astype(jnp.float32)).astype(hn.dtype)
 

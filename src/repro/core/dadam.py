@@ -69,6 +69,13 @@ class DAdamConfig:
                                 # inside shard_map; one worker per slot)
     axis_name: str = "worker"   # mesh axis carrying the worker dim when
                                 # comm='axis'
+    model_parallel: int = 1     # inner model-parallel group size per
+                                # worker (comm='axis' 2D mesh): the packed
+                                # row dim is sharded M-ways over
+                                # model_axis_name and each worker's local
+                                # step runs on a (1, rows/M, 128) shard
+    model_axis_name: str = "model"  # mesh axis carrying the inner model
+                                # shards when model_parallel > 1
 
     def validate(self) -> None:
         if not 0 <= self.beta1 < 1 or not 0 <= self.beta2 < 1:
@@ -92,6 +99,23 @@ class DAdamConfig:
                     "offsets and has no dense-mixing lowering; use "
                     "mixing='roll' (shift-invariant topology) or "
                     "comm='stacked'")
+        if self.model_parallel < 1:
+            raise ValueError(
+                f"model_parallel must be >= 1, got {self.model_parallel}")
+        if self.model_parallel > 1:
+            if self.comm != "axis":
+                raise ValueError(
+                    "model_parallel > 1 is the 2D (worker x model) mesh "
+                    "execution and requires comm='axis'")
+            if self.backend != "pallas":
+                raise ValueError(
+                    "model_parallel > 1 shards the packed row dim of the "
+                    "resident (K, rows, 128) state and requires "
+                    "backend='pallas' (the reference pytree layout has no "
+                    "uniform row dim to shard)")
+            if not self.model_axis_name:
+                raise ValueError(
+                    "model_parallel > 1 needs a non-empty model_axis_name")
         if self.backend == "pallas" and self.bias_correction:
             raise ValueError(
                 "backend='pallas' implements the paper's Alg. 1 update "
@@ -368,11 +392,16 @@ class PackedDAdamState:
         return DAdamState(self.params, self.moments)
 
     @classmethod
-    def from_unpacked(cls, state: DAdamState) -> "PackedDAdamState":
+    def from_unpacked(cls, state: DAdamState, *,
+                      row_shards: int = 1) -> "PackedDAdamState":
+        """``row_shards=M`` packs into the 2D-mesh row-sharded layout
+        (each leaf split across M shard blocks; see kernels/pack.py)."""
         spec = packing.make_spec(state.params, stacked=True,
-                                 block_rows=BLOCK_ROWS, leaf_align=True)
+                                 block_rows=BLOCK_ROWS, leaf_align=True,
+                                 row_shards=row_shards)
         spec_m = packing.make_spec(state.moments.m, stacked=True,
-                                   block_rows=BLOCK_ROWS, leaf_align=True)
+                                   block_rows=BLOCK_ROWS, leaf_align=True,
+                                   row_shards=row_shards)
         return cls(packing.pack(state.params, spec),
                    packing.pack(state.moments.m, spec_m),
                    packing.pack(state.moments.v, spec_m),
@@ -410,7 +439,8 @@ def init(params_stacked: PyTree, cfg: DAdamConfig
     cfg.validate()
     state = DAdamState(params_stacked, init_moments(params_stacked, cfg))
     if cfg.backend == "pallas":
-        return PackedDAdamState.from_unpacked(state)
+        return PackedDAdamState.from_unpacked(
+            state, row_shards=cfg.model_parallel)
     return state
 
 

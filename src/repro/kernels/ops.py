@@ -37,8 +37,10 @@ def sign_compress(x, hat, *, interpret: Optional[bool] = None):
 
 
 def sign_compress_stacked(x, hat, *, n_true: Optional[int] = None,
+                          reduce_axis: Optional[str] = None,
                           interpret: Optional[bool] = None):
     return _sc.sign_compress_stacked(x, hat, n_true=n_true,
+                                     reduce_axis=reduce_axis,
                                      interpret=_interpret(interpret))
 
 

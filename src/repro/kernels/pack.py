@@ -24,6 +24,17 @@ Three layouts:
   kernels — e.g. CD-Adam's sign compression, whose reference semantics put
   one scale per (worker, leaf) — run directly on buffer *slices*, with no
   per-step pack/unpack and no coarsening of the per-leaf math.
+* **row-sharded** (``make_spec(..., leaf_align=True, row_shards=M)``): the
+  2D (worker × model) mesh layout. Every leaf segment is padded to a whole
+  multiple of ``M`` tiles and *split round-robin across M equal row
+  shards*: the buffer's row dim is organized as M contiguous shard blocks,
+  and shard block j holds the j-th 1/M chunk of EVERY leaf, in leaf order.
+  Sharding the row dim over a 'model' mesh axis with ``PartitionSpec
+  ('worker', 'model')`` therefore gives each device 1/M of every leaf at
+  *static, shard-invariant* local row ranges — ``leaf_row_ranges`` returns
+  those per-shard local ranges, so the per-(worker, leaf) kernels run
+  unchanged on each model shard (the scale reduction psums over the model
+  axis; see ``sign_compress_stacked(reduce_axis=...)``).
 
 Padding is to whole (block_rows, LANE) tiles so the kernels never re-pad,
 and is zero-filled — the optimizer kernels preserve zeros in padding, so a
@@ -61,10 +72,12 @@ class PackSpec(NamedTuple):
     dtypes: Tuple[Any, ...]
     sizes: Tuple[int, ...]                # per-(worker-)leaf element counts
     offsets: Tuple[int, ...]              # per-leaf start offset in the
-    #                                       padded flat (per-worker) buffer
+    #                                       padded flat (per-worker) buffer;
+    #                                       PER-SHARD offsets when row_shards>1
     n: int                                # true elements per worker (sum sizes)
     rows: int                             # padded row count: rows*LANE >= n
     k: Optional[int]                      # worker count; None in flat mode
+    row_shards: int = 1                   # model-axis row shards (2D layout)
 
     @property
     def stacked(self) -> bool:
@@ -73,6 +86,11 @@ class PackSpec(NamedTuple):
     @property
     def padded(self) -> int:
         return self.rows * LANE
+
+    @property
+    def local_rows(self) -> int:
+        """Rows of one model shard (== ``rows`` when not row-sharded)."""
+        return self.rows // self.row_shards
 
     @property
     def leaf_aligned(self) -> bool:
@@ -86,6 +104,16 @@ class PackSpec(NamedTuple):
                 else (self.rows, LANE))
 
 
+def is_packed_buffer_shape(shape, k: Optional[int] = None) -> bool:
+    """True when ``shape`` is a stacked packed-buffer shape
+    ``(K, rows, LANE)`` — THE shared recognition rule the 2D sharding
+    helpers use to decide which leaves of a state/grads tree get their
+    row dim placed on a 'model' mesh axis (everything else — scalars,
+    batch stacks, reference pytree leaves — replicates over it)."""
+    return (len(shape) == 3 and shape[-1] == LANE
+            and (k is None or shape[0] == k))
+
+
 def _require_float(dtypes, what: str) -> None:
     for dt in dtypes:
         if not jnp.issubdtype(dt, jnp.floating):
@@ -97,12 +125,22 @@ def _require_float(dtypes, what: str) -> None:
 
 
 def make_spec(tree: PyTree, *, stacked: bool = False,
-              block_rows: int = 1, leaf_align: bool = False) -> PackSpec:
+              block_rows: int = 1, leaf_align: bool = False,
+              row_shards: int = 1) -> PackSpec:
     """Record the layout of ``tree``; pad up to whole (block_rows, LANE)
     tiles. With ``leaf_align`` every *leaf segment* is padded to whole
-    tiles, so each leaf occupies a contiguous tile-aligned row range. Any
-    tree congruent with ``tree`` (same treedef + leaf shapes) can then be
+    tiles, so each leaf occupies a contiguous tile-aligned row range. With
+    ``row_shards=M`` (requires stacked + leaf_align) every segment is
+    additionally padded to a multiple of M tiles and split across M equal
+    row-shard blocks — the 2D (worker × model) mesh layout. Any tree
+    congruent with ``tree`` (same treedef + leaf shapes) can then be
     packed against this spec, regardless of (float) leaf dtypes."""
+    if row_shards < 1:
+        raise ValueError(f"row_shards must be >= 1, got {row_shards}")
+    if row_shards > 1 and not (stacked and leaf_align):
+        raise ValueError(
+            "row_shards > 1 needs stacked=True and leaf_align=True (the "
+            "row-sharded layout is defined over leaf-aligned shard blocks)")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         raise ValueError("cannot pack an empty pytree")
@@ -121,8 +159,12 @@ def make_spec(tree: PyTree, *, stacked: bool = False,
         sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
     per_tile = block_rows * LANE
     if leaf_align:
-        seg = tuple(sz + (-sz) % per_tile for sz in sizes)
-        offsets = tuple(int(o) for o in np.cumsum((0,) + seg)[:-1])
+        quantum = per_tile * row_shards
+        seg = tuple(sz + (-sz) % quantum for sz in sizes)
+        # offsets are within ONE shard block (the whole buffer when
+        # row_shards == 1): cumulative per-shard chunk starts
+        chunks = tuple(s // row_shards for s in seg)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + chunks)[:-1])
         padded = int(sum(seg))
     else:
         offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
@@ -130,15 +172,19 @@ def make_spec(tree: PyTree, *, stacked: bool = False,
         padded = n_true + (-n_true) % per_tile
     return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
                     sizes=sizes, offsets=offsets, n=sum(sizes),
-                    rows=padded // LANE, k=k)
+                    rows=padded // LANE, k=k, row_shards=row_shards)
 
 
 def leaf_row_ranges(spec: PackSpec) -> Tuple[Tuple[int, int], ...]:
     """Per-leaf (row_start, row_end) within the buffer. Requires the
-    leaf-aligned layout (each segment a whole number of rows)."""
+    leaf-aligned layout (each segment a whole number of rows).
+
+    For a row-sharded spec (``row_shards=M``) the ranges are *local to one
+    shard block* — identical on every shard, which is exactly what SPMD
+    code inside a 2D ``shard_map`` needs for static per-leaf slicing."""
     if not spec.leaf_aligned:
         raise ValueError("leaf_row_ranges needs a leaf_align=True spec")
-    ends = spec.offsets[1:] + (spec.padded,)
+    ends = spec.offsets[1:] + (spec.local_rows * LANE,)
     return tuple((o // LANE, e // LANE)
                  for o, e in zip(spec.offsets, ends))
 
@@ -149,11 +195,18 @@ def _check_congruent(leaves, spec: PackSpec) -> None:
         raise ValueError(f"tree does not match spec: {got} vs {spec.shapes}")
 
 
+def _shard_chunks(spec: PackSpec) -> Tuple[int, ...]:
+    """Per-leaf element count within one shard block (== full segment when
+    row_shards == 1)."""
+    ends = spec.offsets[1:] + (spec.local_rows * LANE,)
+    return tuple(e - o for o, e in zip(spec.offsets, ends))
+
+
 def _segment_pads(spec: PackSpec) -> Tuple[int, ...]:
-    """Zero-fill element count after each leaf's true data."""
-    ends = spec.offsets[1:] + (spec.padded,)
-    return tuple(e - o - sz
-                 for o, e, sz in zip(spec.offsets, ends, spec.sizes))
+    """Zero-fill element count after each leaf's true data (whole segment
+    across all row shards)."""
+    return tuple(c * spec.row_shards - sz
+                 for c, sz in zip(_shard_chunks(spec), spec.sizes))
 
 
 def pack(tree: PyTree, spec: PackSpec, dtype: Any = None) -> jax.Array:
@@ -168,11 +221,18 @@ def pack(tree: PyTree, spec: PackSpec, dtype: Any = None) -> jax.Array:
     dt = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*leaves)
     pads = _segment_pads(spec)
     if spec.stacked:
+        M = spec.row_shards
         parts = []
         for l, pad in zip(leaves, pads):
             flat = l.reshape(spec.k, -1).astype(dt)
-            parts.append(jnp.pad(flat, ((0, 0), (0, pad))) if pad else flat)
-        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+            if pad:
+                flat = jnp.pad(flat, ((0, 0), (0, pad)))
+            # row-sharded layout: split this leaf's segment into M equal
+            # chunks so concatenation below interleaves leaves per shard
+            parts.append(flat.reshape(spec.k, M, -1) if M > 1 else flat)
+        axis = 2 if M > 1 else 1
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts,
+                                                                axis=axis)
         return flat.reshape(spec.k, spec.rows, LANE)
     parts = []
     for l, pad in zip(leaves, pads):
@@ -186,6 +246,19 @@ def unpack(buf: jax.Array, spec: PackSpec) -> PyTree:
     """Exact inverse of ``pack``: strip padding, split, restore per-leaf
     shape and dtype."""
     if spec.stacked:
+        if spec.row_shards > 1:
+            # inverse of the row-sharded layout: gather each leaf's M
+            # chunks (one per shard block), re-join, strip padding
+            flat = buf.reshape(spec.k, spec.row_shards, -1)
+            leaves = [
+                flat[:, :, o:o + c].reshape(spec.k, -1)[:, :sz]
+                .astype(dt).reshape(shape)
+                for o, c, sz, dt, shape in zip(spec.offsets,
+                                               _shard_chunks(spec),
+                                               spec.sizes, spec.dtypes,
+                                               spec.shapes)
+            ]
+            return jax.tree_util.tree_unflatten(spec.treedef, leaves)
         flat = buf.reshape(spec.k, -1)
         leaves = [
             flat[:, o:o + sz].astype(dt).reshape(shape)

@@ -119,7 +119,8 @@ def _apply_stacked_kernel(x_ref, h_ref, scale_ref, q_ref, ho_ref):
 def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
                           n_true: Optional[int] = None,
                           block_rows: int = BLOCK_ROWS,
-                          interpret: bool = False
+                          interpret: bool = False,
+                          reduce_axis: Optional[str] = None
                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per-worker sign compression over a stacked (K, ...) tensor.
 
@@ -132,7 +133,15 @@ def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
     ``x`` is a zero-padded slice of a resident packed buffer: the padding
     contributes 0 to the |delta| sum but must not inflate the element
     count, or the per-leaf scale would diverge from the reference
-    compressor's mean over the leaf's true elements."""
+    compressor's mean over the leaf's true elements.
+
+    ``reduce_axis`` names a mesh axis to ``psum`` the |delta| partial sums
+    over before dividing — the 2D (worker × model) mesh path, where ``x``
+    is one model shard's slice of the leaf and the scale must still be the
+    L1 mean over the *whole* (worker, leaf): every shard then computes the
+    identical global scale and a consistent local ``hat`` update. With
+    ``reduce_axis`` set, ``n_true`` is the leaf's GLOBAL true element
+    count and may exceed this shard's slot count."""
     if x.ndim < 1:
         raise ValueError("stacked sign compress needs a leading worker dim")
     K = x.shape[0]
@@ -143,8 +152,11 @@ def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
                 hat)
     if n_true is None:
         n_true = n
-    if not 0 < n_true <= n:
-        raise ValueError(f"n_true={n_true} out of range (0, {n}]")
+    if reduce_axis is None:
+        if not 0 < n_true <= n:
+            raise ValueError(f"n_true={n_true} out of range (0, {n}]")
+    elif n_true <= 0:
+        raise ValueError(f"n_true={n_true} must be positive")
     per_block = block_rows * LANE
     n_pad = (-n) % per_block
 
@@ -168,8 +180,13 @@ def sign_compress_stacked(x: jax.Array, hat: jax.Array, *,
         interpret=interpret,
     )(xx, hh)
     # padded entries are x=0, hat=0 -> contribute 0; divide by the true
-    # per-worker element count.
-    scale = jnp.sum(partials, axis=1) / n_true
+    # per-worker element count. On a 2D mesh the partial sums of the other
+    # model shards join via psum, so the scale is the global per-leaf L1
+    # mean on every shard.
+    local = jnp.sum(partials, axis=1)
+    if reduce_axis is not None:
+        local = jax.lax.psum(local, reduce_axis)
+    scale = local / n_true
     scale2d = scale.reshape(K, 1)
 
     q, hat_new = pl.pallas_call(

@@ -9,6 +9,8 @@ Hardware model (TPU v5e-like, used by the roofline):
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 PEAK_FLOPS = 197e12       # bf16 per chip
@@ -27,14 +29,29 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_worker_mesh(workers: int, *, model: int = 1,
-                     axis_name: str = "worker"):
+def make_worker_mesh(workers: int, *, model_parallel: int = 1,
+                     axis_name: str = "worker", model: int | None = None):
     """Mesh for comm='axis' decentralized execution: one slot of
     ``axis_name`` per worker (the optimizer's ppermute gossip runs over
-    it), optionally crossed with an inner 'model' axis for tensor
-    sharding within each worker."""
-    if model > 1:
-        return jax.make_mesh((workers, model), (axis_name, "model"))
+    it), optionally crossed with an inner 'model' axis
+    (``model_parallel=M``) so each worker is itself an M-device
+    model-parallel group — the packed optimizer state is then sharded
+    ``P('worker', 'model')``, gossip still crosses only the worker axis,
+    and grads are computed model-parallel within each worker
+    (``make_optimizer(comm='axis', mesh=...)`` picks M up from the mesh).
+    Needs ``workers * model_parallel`` devices. ``model=`` is the
+    deprecated spelling of ``model_parallel``."""
+    if model is not None:
+        if model_parallel != 1:
+            raise ValueError(
+                "pass either model_parallel= or the deprecated model=, "
+                f"not both (got model_parallel={model_parallel}, "
+                f"model={model})")
+        warnings.warn("make_worker_mesh(model=...) is deprecated; use "
+                      "model_parallel=", DeprecationWarning, stacklevel=2)
+    m = model_parallel if model is None else model
+    if m > 1:
+        return jax.make_mesh((workers, m), (axis_name, "model"))
     return jax.make_mesh((workers,), (axis_name,))
 
 

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.kernels.pack import is_packed_buffer_shape
 
 PyTree = Any
 
@@ -42,15 +43,27 @@ WORKER_AXIS = "worker"  # the comm='axis' mesh axis name
 
 
 def worker_state_shardings(mesh: Mesh, tree: PyTree, K: int, *,
-                           axis_name: str = WORKER_AXIS) -> PyTree:
+                           axis_name: str = WORKER_AXIS,
+                           model_axis: str = "model") -> PyTree:
     """NamedShardings for a comm='axis' optimizer state (or grads/batch
     stack): every leaf whose leading dim is the worker count K goes on the
     worker mesh axis; scalars (e.g. the step counter) and worker-free
     leaves are replicated. Works for both the reference pytree layout and
-    the packed-resident (K, rows, 128) buffers."""
+    the packed-resident (K, rows, 128) buffers.
+
+    On a 2D worker × model mesh (``make_worker_mesh(K, model_parallel=M)``)
+    packed buffers — 3-D lane-aligned (K, rows, 128) leaves with rows
+    divisible by M — additionally put their row dim on ``model_axis``:
+    the worker × model state sharding of the 2D packed backend. Non-buffer
+    leaves replicate over the model axis."""
+    msz = dict(mesh.shape).get(model_axis, 1)
+
     def one(leaf):
         shape = getattr(leaf, "shape", ())
         if len(shape) >= 1 and shape[0] == K:
+            if (msz > 1 and is_packed_buffer_shape(shape, K)
+                    and shape[1] % msz == 0):
+                return NamedSharding(mesh, P(axis_name, model_axis))
             return NamedSharding(mesh, P(axis_name))
         return NamedSharding(mesh, P())
     return jax.tree_util.tree_map(one, tree)

@@ -71,6 +71,12 @@ def main() -> None:
                          "'worker' mesh axis (one device group per "
                          "worker) and gossips with ppermute inside "
                          "shard_map — needs >= --workers devices")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="with --comm axis --backend pallas: inner "
+                         "model-parallel group size M per worker (2D "
+                         "worker x model mesh; the packed state's row dim "
+                         "is sharded M-ways, gossip still crosses only "
+                         "the worker axis) — needs workers * M devices")
     ap.add_argument("--skew", type=float, default=0.5,
                     help="non-IID-ness of worker shards")
     ap.add_argument("--ckpt", default="")
@@ -82,14 +88,23 @@ def main() -> None:
     cfg = arch.model
     api = build_model(cfg)
     mesh = None
+    if args.model_parallel > 1 and args.comm != "axis":
+        raise SystemExit("--model-parallel > 1 requires --comm axis "
+                         "(the 2D worker x model mesh)")
+    if args.model_parallel > 1 and args.backend != "pallas":
+        raise SystemExit("--model-parallel > 1 requires --backend pallas "
+                         "(it shards the packed row dim)")
     if args.comm == "axis":
-        if jax.device_count() < args.workers:
+        need = args.workers * args.model_parallel
+        if jax.device_count() < need:
             raise SystemExit(
-                f"--comm axis needs one device per worker: have "
-                f"{jax.device_count()} devices for --workers "
-                f"{args.workers} (on CPU, set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={args.workers})")
-        mesh = make_worker_mesh(args.workers)
+                f"--comm axis needs workers * model_parallel devices: "
+                f"have {jax.device_count()} devices for --workers "
+                f"{args.workers} x --model-parallel "
+                f"{args.model_parallel} (on CPU, set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need})")
+        mesh = make_worker_mesh(args.workers,
+                                model_parallel=args.model_parallel)
     opt = make_optimizer(args.optimizer, K=args.workers, eta=args.eta,
                          period=args.period, topology=args.topology,
                          gamma=args.gamma, compressor=args.compressor,
@@ -106,6 +121,11 @@ def main() -> None:
         print(f"[train] worker mesh: {tuple(mesh.shape.items())} — state "
               f"sharded one worker per slot; gossip = ppermute over "
               f"'worker'")
+        if args.model_parallel > 1:
+            print(f"[train] 2D execution: each worker = "
+                  f"{args.model_parallel}-device model-parallel group; "
+                  f"packed rows sharded P('worker', 'model'); compression "
+                  f"scales psum over 'model'")
     if args.backend == "pallas":
         # packed-resident state: params + moments live in the stacked
         # (K, rows, 128) kernel layout across steps; grads are produced

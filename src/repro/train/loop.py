@@ -57,7 +57,14 @@ class DecentralizedTrainer:
     the state lives sharded over the worker mesh axis: ``opt.init`` places
     it there, the jitted step's shard_map keeps it there, and ``fit``
     device_puts each batch's worker dim onto the axis so the per-worker
-    grads are computed where the state shard lives.
+    grads are computed where the state shard lives. On a 2D worker × model
+    mesh the batch replicates over the 'model' axis (every device of a
+    worker's model group sees the worker's whole microbatch) while the
+    resident buffer is row-sharded P('worker', 'model') — the
+    differentiate-through-unpack grad path then computes each worker's
+    loss model-parallel and GSPMD deposits the grads back into the
+    (1, rows/M, 128) row shards, psum-reducing over 'model' where the
+    loss ties shards together.
     """
 
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
@@ -96,7 +103,9 @@ class DecentralizedTrainer:
 
     def _place_batch(self, batch: PyTree) -> PyTree:
         """comm='axis': ship each leaf's worker dim onto the worker mesh
-        axis (no-op for stacked-comm optimizers)."""
+        axis (no-op for stacked-comm optimizers). On a 2D mesh the batch
+        deliberately replicates over the model axis — data parallelism
+        stays between workers, tensor parallelism within them."""
         if self.opt.mesh is None:
             return batch
         return shard_over_workers(batch, self.opt.mesh, self.opt.K,

@@ -1,0 +1,77 @@
+"""Tier-1 smoke test for ``benchmarks/fused_step.py``.
+
+The bench-smoke CI job only runs on pushes to main, so a PR that breaks
+the benchmark script (an optimizer API drift, a renamed record field)
+would land green and rot the benchmark trajectory. This non-slow test
+imports the script as a module and runs one tiny config through every
+timing path, pinning the record schema the CI summary and artifact
+consumers read.
+"""
+import json
+
+import jax
+import pytest
+
+from benchmarks import fused_step
+
+REQUIRED_KEYS = [
+    "reference_us_per_step",
+    "pallas_resident_us_per_step",
+    "pallas_axis_us_per_step",
+    "pallas_axis2d_us_per_step",
+    "pallas_repack_us_per_step",
+    "resident_speedup_vs_repack",
+    "adam_hbm_bytes_unfused",
+    "adam_hbm_bytes_fused_resident",
+    "adam_hbm_bytes_fused_repack",
+]
+
+
+def test_fused_step_smoke(tmp_path, capsys):
+    out = tmp_path / "bench.json"
+    record = fused_step.main(workers=2, size=2048, period=1,
+                             out=str(out), model_parallel=2)
+
+    assert record["benchmark"] == "fused_step"
+    assert record["jax_version"] == jax.__version__
+    assert {r["kind"] for r in record["records"]} == {"d-adam", "cd-adam"}
+    for rec in record["records"]:
+        for key in REQUIRED_KEYS:
+            assert key in rec, f"{rec['kind']} record lost {key!r}"
+        # timed paths that cannot be skipped must have real numbers
+        assert rec["reference_us_per_step"] > 0
+        assert rec["pallas_resident_us_per_step"] > 0
+        assert rec["pallas_repack_us_per_step"] > 0
+        # device-gated paths: real numbers when the devices exist, an
+        # explicit skip reason when not (never silently absent)
+        if jax.device_count() >= 2:
+            assert rec["pallas_axis_us_per_step"] > 0
+        else:
+            assert rec["pallas_axis_skipped"]
+        if jax.device_count() >= 4:
+            assert rec["pallas_axis2d_us_per_step"] > 0
+        else:
+            assert rec["pallas_axis2d_skipped"]
+    cd = next(r for r in record["records"] if r["kind"] == "cd-adam")
+    assert cd["wire_bytes_per_round"] > 0
+
+    # the --out artifact round-trips and the stdout JSON line parses (the
+    # CI job summary scrapes both)
+    assert json.loads(out.read_text()) == record
+    stdout = capsys.readouterr().out
+    json_lines = [ln for ln in stdout.splitlines() if ln.startswith("JSON ")]
+    assert len(json_lines) == 1
+    assert json.loads(json_lines[0][5:])["benchmark"] == "fused_step"
+
+
+def test_fused_step_axis_paths_execute_under_tier1():
+    """tier1.sh forces 8 host devices, so both sharded paths must really
+    run there — guard against the smoke silently degrading to
+    single-device coverage."""
+    if jax.device_count() < 4:
+        pytest.skip("axis paths need >= 4 devices (tier1.sh forces 8)")
+    record = fused_step.main(workers=2, size=2048, period=2,
+                             model_parallel=2)
+    for rec in record["records"]:
+        assert rec["pallas_axis_us_per_step"] > 0
+        assert rec["pallas_axis2d_us_per_step"] > 0

@@ -1,0 +1,353 @@
+"""2D (worker × model) mesh execution of the packed backend.
+
+Extends the 1D comm='axis' tests: a mesh built by
+``make_worker_mesh(K, model_parallel=M)`` carries both a 'worker' axis
+(gossip ppermutes over it) and a 'model' axis (the packed (K, rows, 128)
+state's row dim is sharded M-ways via the ``row_shards=M`` pack layout,
+and CD-Adam's per-(worker, leaf) compression scales psum over it). These
+tests pin, for both optimizers:
+
+* sharded-2D ≡ sharded-1D ≡ single-device packed ≡ reference parity over
+  a 10-step trainer run (the acceptance chain),
+* multi-step ``step`` / ``round`` parity vs the stacked runtime across
+  square and rectangular worker × model factorizations,
+* the state really lands as one (1, rows/M, 128) block per device,
+* checkpoint portability 1D mesh -> 2D mesh and back, bit-identically,
+* ``comm_bytes_per_round`` unchanged by the model axis (regression: the
+  model axis must not inflate per-round byte accounting), and
+* construction-time validation of the 2D mode's requirements.
+
+Device-requiring tests skip when the process has fewer devices than
+K * M (``scripts/tier1.sh`` forces 8 host devices → the (4, 2)
+factorization runs there; the CI device matrix adds a 16-device run
+covering the square (4, 4) and rectangular (8, 2) factorizations).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_optimizer
+from repro.core.cdadam import CDAdamConfig
+from repro.core.dadam import DAdamConfig
+from repro.kernels import pack as packing
+from repro.launch.mesh import make_worker_mesh
+
+KEY = jax.random.PRNGKey(0)
+K, M = 4, 2  # primary factorization; needs the 8 devices tier1.sh forces
+
+# square and rectangular worker x model splits; beyond-(4,2) entries run
+# under the CI device matrix's 16-device job and skip elsewhere
+FACTORIZATIONS = [(4, 2), (4, 4), (8, 2)]
+
+KINDS = ["d-adam", "cd-adam"]
+
+
+def ragged_tree(key, k):
+    ks = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(ks[0], (k, 13, 7)),
+        "b": jax.random.normal(ks[1], (k, 5)),
+        "nest": {"u": jax.random.normal(ks[2], (k, 3, 11, 2))},
+    }
+
+
+def needs_devices(n):
+    return pytest.mark.skipif(
+        jax.device_count() < n,
+        reason=f"needs >= {n} devices (tier1.sh forces 8; the CI device "
+               f"matrix runs 8 and 16)")
+
+
+def skip_unless_devices(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs >= {n} devices, have {jax.device_count()}")
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    skip_unless_devices(K * M)
+    return make_worker_mesh(K, model_parallel=M)
+
+
+@pytest.fixture(scope="module")
+def mesh1d():
+    skip_unless_devices(K)
+    return make_worker_mesh(K)
+
+
+# ------------------------------ validation ----------------------------------
+
+
+class TestValidation:
+    def test_model_parallel_requires_axis_comm(self):
+        with pytest.raises(ValueError, match="comm='axis'"):
+            DAdamConfig(model_parallel=2, backend="pallas").validate()
+
+    def test_model_parallel_requires_pallas_backend(self):
+        with pytest.raises(ValueError, match="pallas"):
+            DAdamConfig(comm="axis", model_parallel=2,
+                        backend="reference").validate()
+
+    def test_model_parallel_must_be_positive(self):
+        with pytest.raises(ValueError, match="model_parallel"):
+            DAdamConfig(model_parallel=0).validate()
+
+    def test_cdadam_inherits_2d_validation(self):
+        with pytest.raises(ValueError, match="pallas"):
+            CDAdamConfig(comm="axis", model_parallel=2,
+                         backend="reference").validate()
+
+    @needs_devices(K * M)
+    def test_reference_backend_on_2d_mesh_stays_1d(self, mesh2d):
+        """2D row-sharding is declared by backend='pallas' + a model axis;
+        under backend='reference' a model axis on the mesh keeps its
+        pre-2D meaning (state replicated over it) — the run must still
+        match the stacked reference bit-for-bit in parity terms."""
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, period=2,
+                             comm="axis", mesh=mesh2d,
+                             backend="reference")
+        assert opt.cfg.model_parallel == 1
+        base = make_optimizer("d-adam", K=K, eta=1e-2, period=2,
+                              backend="reference")
+        params = ragged_tree(KEY, K)
+        s0 = base.init(jax.tree_util.tree_map(jnp.copy, params))
+        s1 = opt.init(jax.tree_util.tree_map(jnp.copy, params))
+        for t in range(3):
+            g = jax.tree_util.tree_map(
+                lambda x: 0.5 * x + 0.01 * (t + 1), base.params_of(s0))
+            s0, s1 = base.step(s0, g), opt.step(s1, g)
+        for a, b in zip(jax.tree_util.tree_leaves(base.params_of(s0)),
+                        jax.tree_util.tree_leaves(opt.params_of(s1))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=1e-6)
+
+    @needs_devices(K * M)
+    def test_wrong_worker_axis_size_on_2d_mesh_rejected(self, mesh2d):
+        with pytest.raises(ValueError, match="size K"):
+            make_optimizer("d-adam", K=K + 1, comm="axis", mesh=mesh2d,
+                           backend="pallas")
+
+
+# ----------------------- state placement on the mesh -------------------------
+
+
+@needs_devices(K * M)
+class TestStatePlacement:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_one_row_block_per_device(self, kind, mesh2d):
+        """init really lands one (1, rows/M, 128) block on each of the
+        K x M devices, with the row-sharded pack layout recorded in the
+        spec; the scalar count stays fully replicated."""
+        opt = make_optimizer(kind, K=K, eta=1e-2, backend="pallas",
+                             comm="axis", mesh=mesh2d)
+        state = opt.init(ragged_tree(KEY, K))
+        assert state.spec.row_shards == M
+        assert state.spec.rows % (M * packing.BLOCK_ROWS) == 0
+        shard_shapes = {s.data.shape for s in state.buf.addressable_shards}
+        assert shard_shapes == {(1, state.buf.shape[1] // M, 128)}
+        assert len(state.buf.addressable_shards) == K * M
+        assert len(state.count.addressable_shards) == K * M
+        if kind == "cd-adam":
+            for h in state.hat_nbr_bufs:
+                assert {s.data.shape for s in h.addressable_shards} == \
+                    {(1, state.buf.shape[1] // M, 128)}
+
+    def test_unpacked_view_roundtrips_from_shards(self, mesh2d):
+        """params_of on the 2D-sharded row-sharded buffer materializes the
+        exact original tree (the row-sharded unpack is layout-exact)."""
+        params = ragged_tree(KEY, K)
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, backend="pallas",
+                             comm="axis", mesh=mesh2d)
+        state = opt.init(jax.tree_util.tree_map(jnp.copy, params))
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            opt.params_of(state), params)
+
+
+# --------------------------- 2D == stacked parity ----------------------------
+
+
+def _step_parity(kind, k, m):
+    """4 steps with period=2 (both cond branches): 2D shard_map == the
+    stacked single-program packed run."""
+    mesh = make_worker_mesh(k, model_parallel=m)
+    params = ragged_tree(KEY, k)
+    base = make_optimizer(kind, K=k, eta=1e-2, period=2, weight_decay=0.01,
+                          backend="pallas")
+    axis2 = make_optimizer(kind, K=k, eta=1e-2, period=2, weight_decay=0.01,
+                           backend="pallas", comm="axis", mesh=mesh)
+    s0 = base.init(jax.tree_util.tree_map(jnp.copy, params))
+    s2 = axis2.init(jax.tree_util.tree_map(jnp.copy, params))
+    step0 = jax.jit(lambda s, g: base.step(s, g))
+    step2 = jax.jit(lambda s, g: axis2.step(s, g))
+    for t in range(4):
+        g = jax.tree_util.tree_map(
+            lambda x: 0.5 * x + 0.01 * (t + 1), base.params_of(s0))
+        # each runtime's grads pack against its OWN layout (row-sharded
+        # for the 2D state)
+        s0 = step0(s0, packing.pack(g, s0.spec, dtype=s0.buf.dtype))
+        s2 = step2(s2, packing.pack(g, s2.spec, dtype=s2.buf.dtype))
+    for a, b in zip(jax.tree_util.tree_leaves(base.params_of(s0)),
+                    jax.tree_util.tree_leaves(axis2.params_of(s2))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+
+
+class TestAxis2DMatchesStacked:
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("factor", FACTORIZATIONS,
+                             ids=lambda f: f"K{f[0]}xM{f[1]}")
+    def test_multi_step_parity(self, kind, factor):
+        k, m = factor
+        skip_unless_devices(k * m)
+        _step_parity(kind, k, m)
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_round_step_parity(self, kind, mesh2d):
+        """p local fused steps + one gossip inside the 2D shard_map ==
+        the stacked round; grad_fn sees each device's (1, rows/M, 128)
+        row-shard block."""
+        params = ragged_tree(KEY, K)
+        base = make_optimizer(kind, K=K, eta=1e-2, period=3,
+                              backend="pallas")
+        axis2 = make_optimizer(kind, K=K, eta=1e-2, period=3,
+                               backend="pallas", comm="axis", mesh=mesh2d)
+        batches = jnp.zeros((3, K, 1))
+        grad_fn = lambda buf, batch: 0.5 * buf
+        s0 = base.round(base.init(jax.tree_util.tree_map(jnp.copy, params)),
+                        grad_fn, batches)
+        s2 = axis2.round(axis2.init(jax.tree_util.tree_map(jnp.copy,
+                                                           params)),
+                         grad_fn, batches)
+        assert int(s2.count) == 3
+        for a, b in zip(jax.tree_util.tree_leaves(base.params_of(s0)),
+                        jax.tree_util.tree_leaves(axis2.params_of(s2))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=1e-6)
+
+
+# ---------------- acceptance: the full parity chain, 10 steps ----------------
+
+
+@needs_devices(K * M)
+class TestTrainerParityChain:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_2d_equals_1d_equals_packed_equals_reference(self, kind,
+                                                         mesh1d, mesh2d):
+        """10-step trainer run: sharded-2D ≡ sharded-1D ≡ single-device
+        packed ≡ reference, for losses and final params. The 2D config
+        exercises the full production path: batch placement, the
+        differentiate-through-unpack grads on row shards, ppermute gossip
+        and (for CD-Adam) model-axis-psum'd compression scales."""
+        from repro.train import DecentralizedTrainer
+
+        d = 37
+        centers = jax.random.normal(KEY, (K, d))
+
+        def loss_fn(params, batch):
+            return jnp.sum((params["x"] - batch) ** 2)
+
+        def batch_iter():
+            t = 0
+            while True:
+                yield centers + 0.01 * t
+                t += 1
+
+        configs = {
+            "reference": dict(backend="reference"),
+            "packed": dict(backend="pallas"),
+            "axis1d": dict(backend="pallas", comm="axis", mesh=mesh1d),
+            "axis2d": dict(backend="pallas", comm="axis", mesh=mesh2d),
+        }
+        logs, finals = {}, {}
+        for name, kw in configs.items():
+            opt = make_optimizer(kind, K=K, eta=5e-2, period=2, **kw)
+            trainer = DecentralizedTrainer(loss_fn, opt)
+            state = trainer.init({"x": jnp.zeros((d,))})
+            state, log = trainer.fit(state, batch_iter(), 10, log_every=5)
+            logs[name] = log
+            finals[name] = np.asarray(opt.params_of(state)["x"])
+        for name in ("packed", "axis1d", "axis2d"):
+            np.testing.assert_allclose(logs["reference"].loss,
+                                       logs[name].loss,
+                                       rtol=2e-4, atol=1e-5)
+            np.testing.assert_allclose(finals["reference"], finals[name],
+                                       rtol=2e-4, atol=2e-5)
+        # the three packed runtimes agree much tighter among themselves
+        for name in ("axis1d", "axis2d"):
+            np.testing.assert_allclose(finals["packed"], finals[name],
+                                       rtol=2e-5, atol=2e-6)
+
+
+# --------------------------- checkpoint portability --------------------------
+
+
+@needs_devices(K * M)
+class TestCheckpoint1Dto2D:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_both_directions_bit_identical(self, kind, tmp_path, mesh1d,
+                                           mesh2d):
+        """save on the 1D worker mesh -> restore onto the 2D mesh (and
+        back): portable leaf values bit-identical, layout re-sharded to
+        the like-state's row_shards, placement the like-state's; the
+        restored state keeps stepping in lockstep."""
+        from repro.checkpoint import restore, save
+
+        params = ragged_tree(KEY, K)
+        ax1 = make_optimizer(kind, K=K, eta=1e-2, backend="pallas",
+                             comm="axis", mesh=mesh1d)
+        ax2 = make_optimizer(kind, K=K, eta=1e-2, backend="pallas",
+                             comm="axis", mesh=mesh2d)
+        s1 = ax1.init(jax.tree_util.tree_map(jnp.copy, params))
+        s1 = ax1.step(s1, 0.3 * s1.buf)
+
+        # 1D -> 2D
+        path = str(tmp_path / "ck1d.npz")
+        save(path, s1, step=1)
+        like2 = ax2.init(jax.tree_util.tree_map(jnp.copy, params))
+        r2, step = restore(path, like2)
+        assert step == 1
+        assert r2.spec.row_shards == M
+        assert r2.buf.sharding == like2.buf.sharding
+        for a, b in zip(jax.tree_util.tree_leaves(s1.unpacked()),
+                        jax.tree_util.tree_leaves(r2.unpacked())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # 2D -> 1D
+        path2 = str(tmp_path / "ck2d.npz")
+        save(path2, r2, step=2)
+        r1, step = restore(path2, ax1.init(
+            jax.tree_util.tree_map(jnp.copy, params)))
+        assert step == 2
+        assert r1.spec.row_shards == 1
+        np.testing.assert_array_equal(np.asarray(r1.buf), np.asarray(s1.buf))
+
+        # restored 2D state steps in lockstep with the 1D original
+        o2 = ax2.step(r2, 0.3 * r2.buf)
+        o1 = ax1.step(s1, 0.3 * s1.buf)
+        for a, b in zip(jax.tree_util.tree_leaves(o1.unpacked()),
+                        jax.tree_util.tree_leaves(o2.unpacked())):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=1e-6)
+
+
+# ------------------- byte accounting unchanged by 'model' --------------------
+
+
+@needs_devices(K * M)
+class TestCommBytes2D:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_model_axis_does_not_inflate_bytes(self, kind, mesh2d):
+        """Per-round wire bytes are a per-worker quantity: sharding each
+        worker over M model devices must not change the accounting
+        (extends the PR 2 degree-from-weight-matrix fix)."""
+        params = ragged_tree(KEY, K)
+        stacked = make_optimizer(kind, K=K, eta=1e-2, backend="pallas")
+        axis2 = make_optimizer(kind, K=K, eta=1e-2, backend="pallas",
+                               comm="axis", mesh=mesh2d)
+        want = stacked.comm_bytes_per_round(params)
+        state2 = axis2.init(jax.tree_util.tree_map(jnp.copy, params))
+        got = axis2.comm_bytes_per_round(axis2.params_of(state2))
+        assert got == want > 0

@@ -1,0 +1,217 @@
+"""Randomized property-style round-trip tests for ``repro.kernels.pack``.
+
+``tests/test_backend_parity.py`` pins hand-picked layouts; this module
+sweeps a seeded randomized space of tree structures instead (stdlib +
+numpy RNG only, no hypothesis): ragged/odd leaf shapes (primes,
+singletons, rank 0-4), mixed f32/bf16 dtypes, non-divisible row counts,
+every layout combination (flat / stacked / leaf-aligned / row-sharded)
+and random block_rows. Invariants checked per sample:
+
+* ``unpack(pack(tree)) == tree`` exactly (dtype-preserving, bf16 exact),
+* buffer shape / tile divisibility / ``local_rows`` consistency,
+* all padding slots are exactly zero (the resident-layout soundness
+  invariant the optimizer kernels rely on),
+* leaf-aligned row ranges tile the (local) buffer exactly, in order, and
+  each leaf's range holds its elements,
+* the row-sharded layout really round-robins every leaf across shard
+  blocks: slicing shard block j of the buffer and re-joining reproduces
+  ``pack`` with ``row_shards=1`` leaf-for-leaf,
+* worker locality: row k of a stacked buffer holds exactly worker k's
+  elements,
+
+plus the construction-time rejections: empty pytrees, integer/bool
+leaves, row_shards without stacked+leaf_align, and incongruent trees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import pack as packing
+
+LANE = packing.LANE
+
+
+def random_tree(rng: np.random.Generator, stacked_k):
+    """Random pytree: 1-5 leaves, awkward shapes, mixed float dtypes."""
+    n_leaves = int(rng.integers(1, 6))
+    dims_pool = [1, 2, 3, 5, 7, 11, 13, 17, 127, 129, 300]
+    tree = {}
+    for i in range(n_leaves):
+        rank = int(rng.integers(0, 4))
+        shape = tuple(int(rng.choice(dims_pool)) for _ in range(rank))
+        if stacked_k is not None:
+            shape = (stacked_k,) + shape
+        dtype = jnp.bfloat16 if rng.random() < 0.3 else jnp.float32
+        leaf = jnp.asarray(rng.standard_normal(shape), dtype)
+        # nest roughly half the leaves one level down
+        if rng.random() < 0.5:
+            tree.setdefault("nest", {})[f"l{i}"] = leaf
+        else:
+            tree[f"l{i}"] = leaf
+    return tree
+
+
+def assert_exact(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: (np.testing.assert_array_equal(
+            np.asarray(x, np.float32), np.asarray(y, np.float32)),
+            # dtype must round-trip too
+            np.testing.assert_equal(jnp.dtype(x.dtype), jnp.dtype(y.dtype))),
+        a, b)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_roundtrip_random_layout(seed):
+    rng = np.random.default_rng(seed)
+    stacked = bool(rng.random() < 0.7)
+    k = int(rng.integers(1, 6)) if stacked else None
+    block_rows = int(rng.choice([1, 2, 8, 32]))
+    leaf_align = bool(stacked and rng.random() < 0.7)
+    row_shards = int(rng.choice([1, 2, 3, 4])) if leaf_align else 1
+    tree = random_tree(rng, k)
+
+    spec = packing.make_spec(tree, stacked=stacked, block_rows=block_rows,
+                             leaf_align=leaf_align, row_shards=row_shards)
+    buf = packing.pack(tree, spec)
+
+    # shape + divisibility invariants
+    assert buf.shape == spec.buf_shape()
+    assert spec.rows % block_rows == 0
+    assert spec.rows % row_shards == 0
+    assert spec.local_rows == spec.rows // row_shards
+    if leaf_align:
+        assert spec.local_rows % block_rows == 0
+
+    # exact inverse, dtypes preserved
+    assert_exact(packing.unpack(buf, spec), tree)
+
+    # padding slots are exactly zero: rebuild the data mask from the spec
+    flat = np.asarray(buf, np.float32).reshape(spec.k or 1, -1)
+    mask = np.zeros(flat.shape[1], bool)
+    chunks = packing._shard_chunks(spec)
+    per_shard = spec.padded // spec.row_shards
+    for o, c, sz in zip(spec.offsets, chunks, spec.sizes):
+        for j in range(spec.row_shards):
+            lo = j * per_shard + o
+            # data fills the leaf's chunks in order; chunk j holds
+            # elements [j*c, min((j+1)*c, sz))
+            fill = min(max(sz - j * c, 0), c)
+            mask[lo:lo + fill] = True
+    assert np.all(flat[:, ~mask] == 0.0)
+
+    if leaf_align:
+        ranges = packing.leaf_row_ranges(spec)
+        # ranges tile the local row space exactly, in leaf order
+        assert ranges[0][0] == 0 and ranges[-1][1] == spec.local_rows
+        for (a0, a1), (b0, b1) in zip(ranges, ranges[1:]):
+            assert a1 == b0
+        for (r0, r1), sz in zip(ranges, spec.sizes):
+            assert (r1 - r0) * LANE * row_shards >= sz
+            assert (r1 - r0) % block_rows == 0
+    else:
+        with pytest.raises(ValueError, match="leaf_align"):
+            packing.leaf_row_ranges(spec)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_row_sharded_blocks_reorder_the_unsharded_layout(seed):
+    """Shard block j of the row-sharded buffer holds the j-th 1/M chunk of
+    every leaf — re-joining the blocks chunk-wise reproduces each leaf."""
+    rng = np.random.default_rng(100 + seed)
+    k = int(rng.integers(1, 5))
+    m = int(rng.choice([2, 3, 4]))
+    block_rows = int(rng.choice([1, 4, 8]))
+    tree = random_tree(rng, k)
+    spec = packing.make_spec(tree, stacked=True, block_rows=block_rows,
+                             leaf_align=True, row_shards=m)
+    buf = np.asarray(packing.pack(tree, spec), np.float32)
+    blocks = buf.reshape(k, m, -1)                 # (K, shard, slots)
+    leaves = jax.tree_util.tree_leaves(tree)
+    for leaf, o, c, sz in zip(leaves, spec.offsets,
+                              packing._shard_chunks(spec), spec.sizes):
+        rejoined = blocks[:, :, o:o + c].reshape(k, -1)[:, :sz]
+        np.testing.assert_array_equal(
+            rejoined, np.asarray(leaf, np.float32).reshape(k, -1))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_stacked_worker_locality(seed):
+    """Row k of a stacked buffer holds exactly worker k's data, in every
+    layout — packing a single-worker slice reproduces buffer row k."""
+    rng = np.random.default_rng(200 + seed)
+    k = int(rng.integers(2, 6))
+    row_shards = int(rng.choice([1, 2]))
+    tree = random_tree(rng, k)
+    spec = packing.make_spec(tree, stacked=True, block_rows=4,
+                             leaf_align=True, row_shards=row_shards)
+    buf = packing.pack(tree, spec)
+    w = int(rng.integers(0, k))
+    sub = jax.tree_util.tree_map(lambda x: x[w:w + 1], tree)
+    sub_spec = packing.make_spec(sub, stacked=True, block_rows=4,
+                                 leaf_align=True, row_shards=row_shards)
+    np.testing.assert_array_equal(np.asarray(buf[w:w + 1]),
+                                  np.asarray(packing.pack(sub, sub_spec)))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_grads_through_unpack_transpose(seed):
+    """AD's transpose of unpack deposits grads into the right slots for
+    every layout (the trainer's zero-pack grad path)."""
+    rng = np.random.default_rng(300 + seed)
+    k = int(rng.integers(1, 4))
+    row_shards = int(rng.choice([1, 2, 4]))
+    tree = random_tree(rng, k)
+    # f32 only: grad-of-bf16 comparisons would just test rounding
+    tree = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), tree)
+    spec = packing.make_spec(tree, stacked=True, block_rows=2,
+                             leaf_align=True, row_shards=row_shards)
+    buf = packing.pack(tree, spec)
+
+    def loss(b):
+        return sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                   for x in jax.tree_util.tree_leaves(
+                       packing.unpack(b, spec)))
+
+    g = jax.grad(loss)(buf)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(buf),
+                               rtol=1e-6)
+
+
+class TestRejections:
+    def test_empty_pytree_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            packing.make_spec({})
+        with pytest.raises(ValueError, match="empty"):
+            packing.make_spec({"a": {}, "b": ()})
+
+    @pytest.mark.parametrize("bad", [
+        {"ids": jnp.arange(8, dtype=jnp.int32)},
+        {"mask": jnp.ones((4,), bool)},
+        {"w": jnp.ones((4, 4)), "ids": jnp.arange(8, dtype=jnp.int32)},
+    ])
+    def test_non_float_leaves_rejected(self, bad):
+        with pytest.raises(ValueError, match="float"):
+            packing.make_spec(bad)
+
+    def test_row_shards_needs_stacked_and_aligned(self):
+        tree = {"w": jnp.ones((4, 8))}
+        with pytest.raises(ValueError, match="row_shards"):
+            packing.make_spec(tree, row_shards=2)
+        with pytest.raises(ValueError, match="row_shards"):
+            packing.make_spec(tree, stacked=True, row_shards=2)
+        with pytest.raises(ValueError, match="row_shards"):
+            packing.make_spec(tree, row_shards=0)
+
+    def test_ragged_worker_dims_rejected(self):
+        with pytest.raises(ValueError, match="worker dim"):
+            packing.make_spec({"a": jnp.ones((2, 3)), "b": jnp.ones((4, 3))},
+                              stacked=True)
+
+    def test_incongruent_tree_rejected(self):
+        tree = {"w": jnp.ones((3, 8)), "b": jnp.ones((3, 5))}
+        spec = packing.make_spec(tree, stacked=True, leaf_align=True,
+                                 block_rows=2, row_shards=3)
+        bad = {"w": jnp.ones((3, 8)), "b": jnp.ones((3, 6))}
+        with pytest.raises(ValueError, match="match spec"):
+            packing.pack(bad, spec)
