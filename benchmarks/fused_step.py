@@ -27,9 +27,12 @@ across four execution paths:
 Each timed loop threads the stepped state back in and calls
 ``jax.block_until_ready`` on it INSIDE the loop — without that, XLA's
 async dispatch lets the cheap paths under-report by returning before the
-step has executed. The JSON record carries per-step latency for all three
-paths, the analytic HBM / wire byte counts, and the jax version +
-platform the numbers were measured on.
+step has executed. The JSON record carries per-step latency for all
+paths, the analytic HBM / wire byte counts, per-variant collective
+counts/bytes of the compiled step (``repro.analysis.hlo`` on the
+partitioned HLO — the communication trajectory, incl. the 2D step's
+all-gather count), and the jax version + platform the numbers were
+measured on.
 
 On CPU the Pallas kernels execute in interpret mode, so the pallas
 columns are a CORRECTNESS path here, not a speed claim — the meaningful
@@ -74,11 +77,28 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.analysis.hlo import collective_summary
 from repro.core import cdadam, dadam, make_compressor, make_optimizer
 from repro.kernels import pack as packing
 from repro.launch.mesh import make_worker_mesh
 
 LANE = 128
+
+
+def compile_step(step_fn, state, grads):
+    """AOT-compile the step ONCE for these exact (sharded) arguments; the
+    compiled callable is both timed and mined for its collective summary
+    — no second compile behind jit's back."""
+    return jax.jit(step_fn).lower(state, grads).compile()
+
+
+def step_collectives(compiled) -> dict:
+    """Per-kind collective {count, bytes, max_bytes} of the compiled step
+    (repro.analysis.hlo on the partitioned HLO text) — the bench record's
+    communication column: the trajectory captures what crosses the wire,
+    not just latency. In particular a regression that re-introduces a
+    full-parameter all-gather into the 2D step shows up here per push."""
+    return dict(collective_summary(compiled.as_text()))
 
 
 def make_params(key, K: int, size: int):
@@ -138,8 +158,10 @@ def bench_kind(kind: str, K: int, size: int, period: int,
     opt = make_optimizer(kind, K=K, eta=1e-3, period=period,
                          backend="reference")
     state = opt.init(jax.tree_util.tree_map(jnp.copy, params))
-    us = time_stepped(jax.jit(lambda s, g: opt.step(s, g)), state, grads)
+    ref_step = compile_step(lambda s, g: opt.step(s, g), state, grads)
+    us = time_stepped(ref_step, state, grads)
     rec["reference_us_per_step"] = round(us, 1)
+    rec["reference_collectives"] = step_collectives(ref_step)
     emit(f"fused_step/{kind}_reference", us,
          f"{n * 4 / (us / 1e6) / 1e9:.2f}GB/s param-touch")
     if kind == "cd-adam":
@@ -151,10 +173,11 @@ def bench_kind(kind: str, K: int, size: int, period: int,
                           backend="pallas")
     pstate = popt.init(jax.tree_util.tree_map(jnp.copy, params))
     gbuf = packing.pack(grads, pstate.spec, dtype=pstate.buf.dtype)
-    us_res = time_stepped(jax.jit(lambda s, g: popt.step(s, g)), pstate,
-                          gbuf)
+    res_step = compile_step(lambda s, g: popt.step(s, g), pstate, gbuf)
+    us_res = time_stepped(res_step, pstate, gbuf)
     rec["pallas_resident_us_per_step"] = round(us_res, 1)
     rec["pallas_us_per_step"] = rec["pallas_resident_us_per_step"]
+    rec["pallas_resident_collectives"] = step_collectives(res_step)
     emit(f"fused_step/{kind}_pallas_resident", us_res,
          f"{n * 4 / (us_res / 1e6) / 1e9:.2f}GB/s param-touch")
 
@@ -168,14 +191,17 @@ def bench_kind(kind: str, K: int, size: int, period: int,
                               backend="pallas", comm="axis", mesh=mesh)
         astate = aopt.init(jax.tree_util.tree_map(jnp.copy, params))
         gbuf_axis = jax.device_put(gbuf, astate.buf.sharding)
-        us_axis = time_stepped(jax.jit(lambda s, g: aopt.step(s, g)),
-                               astate, gbuf_axis)
+        axis_step = compile_step(lambda s, g: aopt.step(s, g), astate,
+                                 gbuf_axis)
+        us_axis = time_stepped(axis_step, astate, gbuf_axis)
         rec["pallas_axis_us_per_step"] = round(us_axis, 1)
+        rec["pallas_axis_collectives"] = step_collectives(axis_step)
         emit(f"fused_step/{kind}_pallas_axis", us_axis,
              f"{K}-device shard_map; "
              f"{n * 4 / (us_axis / 1e6) / 1e9:.2f}GB/s param-touch")
     else:
         rec["pallas_axis_us_per_step"] = None
+        rec["pallas_axis_collectives"] = None
         rec["pallas_axis_skipped"] = (
             f"needs {K} devices, have {jax.device_count()}")
 
@@ -190,14 +216,19 @@ def bench_kind(kind: str, K: int, size: int, period: int,
         astate2 = aopt2.init(jax.tree_util.tree_map(jnp.copy, params))
         gbuf2 = packing.pack(grads, astate2.spec, dtype=astate2.buf.dtype)
         gbuf2 = jax.device_put(gbuf2, astate2.buf.sharding)
-        us_2d = time_stepped(jax.jit(lambda s, g: aopt2.step(s, g)),
-                             astate2, gbuf2)
+        axis2d_step = compile_step(lambda s, g: aopt2.step(s, g), astate2,
+                                   gbuf2)
+        us_2d = time_stepped(axis2d_step, astate2, gbuf2)
         rec["pallas_axis2d_us_per_step"] = round(us_2d, 1)
+        # the 2D regression instrument: all-gather count/max_bytes of the
+        # compiled step must stay at zero / below full-parameter size
+        rec["pallas_axis2d_collectives"] = step_collectives(axis2d_step)
         emit(f"fused_step/{kind}_pallas_axis2d", us_2d,
              f"{K}x{M}-device shard_map; "
              f"{n * 4 / (us_2d / 1e6) / 1e9:.2f}GB/s param-touch")
     else:
         rec["pallas_axis2d_us_per_step"] = None
+        rec["pallas_axis2d_collectives"] = None
         rec["pallas_axis2d_skipped"] = (
             "disabled (--model-parallel <= 1)" if M <= 1 else
             f"needs {K * M} devices (model_parallel={M}), "

@@ -6,6 +6,8 @@ adaptivity matters) — and prints loss / consensus / communication cost.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import jax
 
 from repro.core import make_optimizer
@@ -14,6 +16,7 @@ from repro.models.deepfm import deepfm_loss, init_deepfm
 from repro.train import DecentralizedTrainer
 
 K = 8  # workers in a ring, as in the paper's experiments
+STEPS = int(os.environ.get("QUICKSTART_STEPS", "100"))  # CI smoke shrinks
 
 task = make_ctr_task(seed=0, n_fields=8, features_per_field=32)
 
@@ -34,7 +37,7 @@ def batches():
         t += 1
 
 
-state, log = trainer.fit(state, batches(), steps=100, log_every=20)
+state, log = trainer.fit(state, batches(), steps=STEPS, log_every=20)
 for s, l, c, mb in zip(log.step, log.loss, log.consensus, log.comm_mb):
     print(f"step {s:4d}  loss {l:.4f}  consensus {c:.2e}  comm {mb:.1f} MB")
 print("final averaged-model params ready:",

@@ -208,6 +208,11 @@ class HloCost:
         default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
     coll_counts: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    # largest single collective instruction per kind (operand bytes, NOT
+    # multiplied by loop trip counts) — the "is there an all-gather of
+    # full-parameter size in this step?" regression instrument
+    coll_max: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
     unknown_trip_counts: int = 0
 
     def total_coll(self) -> float:
@@ -256,9 +261,11 @@ def analyze(text: str) -> HloCost:
             if base_kind in COLLECTIVE_KINDS:
                 if ins.op.endswith("-done"):
                     continue
-                cost.coll[base_kind] += mult * _collective_operand_bytes(
-                    ins, base_kind, comp)
+                one = _collective_operand_bytes(ins, base_kind, comp)
+                cost.coll[base_kind] += mult * one
                 cost.coll_counts[base_kind] += mult
+                cost.coll_max[base_kind] = max(cost.coll_max[base_kind],
+                                               one)
                 cost.bytes += mult * _shape_list_bytes(ins.result_type)
                 continue
             if ins.op == "while":
@@ -357,6 +364,20 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 def collective_counts(hlo_text: str) -> Dict[str, int]:
     c = analyze(hlo_text)
     return {k: int(v) for k, v in c.coll_counts.items()}
+
+
+def collective_summary(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Per-kind {count, bytes, max_bytes} — the communication regression
+    instrument. ``count``/``bytes`` carry while-loop trip multipliers;
+    ``max_bytes`` is the largest SINGLE collective of that kind, which is
+    what "no all-gather of full-parameter size" assertions compare against
+    (a trip-multiplied total would flag many small collectives as one big
+    one)."""
+    c = analyze(hlo_text)
+    return {k: {"count": int(c.coll_counts[k]),
+                "bytes": int(c.coll[k]),
+                "max_bytes": int(c.coll_max[k])}
+            for k in COLLECTIVE_KINDS}
 
 
 def full_cost(hlo_text: str) -> Dict[str, float]:

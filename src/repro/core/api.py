@@ -32,10 +32,14 @@ row_shards=M``) and partitioned ``P('worker', 'model')`` — each of the
 K × M devices holds a (1, rows/M, 128) block carrying 1/M of every leaf.
 Gossip/payload ppermutes cross ONLY the worker axis (each model column
 exchanges its own row block), grads are computed model-parallel against
-the row-sharded buffer (the trainer's differentiate-through-unpack path;
-XLA inserts the psums), and CD-Adam's per-(worker, leaf) compression
-scales psum their |delta| partials over 'model' so the math stays exactly
-the reference semantics. Requires ``backend='pallas'``.
+the row-sharded buffer — either by the grad pipeline's sharded-packed
+mode (``opt.sharded_value_and_grad`` runs the loss inside the 2D
+shard_map on each device's local block: zero full-param all-gather; see
+``train/grad.py``) or by GSPMD through the row-sharded unpack — and
+CD-Adam's per-(worker, leaf) compression scales psum their |delta|
+partials over 'model' so the math stays exactly the reference semantics
+(``scales='worker'`` opts into one whole-buffer scale per worker
+instead). Requires ``backend='pallas'``.
 """
 from __future__ import annotations
 
@@ -160,9 +164,31 @@ def _with_axis_execution(opt: "DecentralizedOptimizer", mesh: Any,
                                         worker_dim=1)),
             out_specs=state_specs, check_rep=False)(state, batches)
 
+    sharded_vag = None
+    if model_axis is not None:
+        # The 2D grad-pipeline hook: run a local value-and-grad over each
+        # device's (1, rows/M, 128) row-shard block of the resident
+        # parameter buffer, inside the SAME 2D shard_map the step uses.
+        # ``local_vag(buf_local, batch_local) -> (losses (1,), gbuf_local)``
+        # is traced with both mesh axes bound, so the loss psums over the
+        # model axis explicitly and the returned grads buffer comes out
+        # sharded exactly like the state — no resharding between the grad
+        # shard_map and the step shard_map, and no collective the loss
+        # does not spell out (the zero-all-gather property
+        # tests/test_grad_pipeline.py pins).
+        def sharded_vag(local_vag: Callable, state: Any, batch: PyTree):
+            buf_spec = P(axis_name, model_axis)
+            batch_specs = worker_pspec_tree(batch, K, axis_name)
+            return shard_map(
+                local_vag, mesh=mesh,
+                in_specs=(buf_spec, batch_specs),
+                out_specs=(P(axis_name), buf_spec),
+                check_rep=False)(state.buf, batch)
+
     return dataclasses.replace(
         opt, init=init, step=step,
-        round=round_ if base_round is not None else None, mesh=mesh)
+        round=round_ if base_round is not None else None, mesh=mesh,
+        sharded_value_and_grad=sharded_vag)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +202,10 @@ class DecentralizedOptimizer:
     round: Callable[[Any, Callable, Any], Any]
     params_of: Callable[[Any], PyTree]
     mesh: Any = None              # set when comm='axis': the worker mesh
+    # set on 2D (worker x model) meshes: run a local value-and-grad over
+    # each device's row-shard block inside the 2D shard_map (the grad
+    # pipeline's sharded-packed mode; see train/grad.py)
+    sharded_value_and_grad: Any = None
 
     @property
     def K(self) -> int:
@@ -200,6 +230,11 @@ class DecentralizedOptimizer:
             deg = len(self.topo.neighbors_of(0))
         if self.compressor is None:
             return deg * tree_dense_bytes(per_worker)
+        if getattr(self.cfg, "scales", "leaf") == "worker":
+            # whole-buffer compression: int8 sign payload per element plus
+            # ONE f32 scale per worker (instead of one per leaf)
+            n = sum(x.size for x in jax.tree_util.tree_leaves(per_worker))
+            return deg * (n + 4)
         return deg * tree_wire_bytes(self.compressor, per_worker)
 
 
@@ -216,6 +251,7 @@ def make_optimizer(
     weight_decay: float = 0.0,
     gamma: float = 0.4,
     compressor: str | Compressor = "sign",
+    scales: str = "leaf",
     mixing: str = "roll",
     moment_dtype=None,
     backend: str = "reference",
@@ -227,6 +263,9 @@ def make_optimizer(
 ) -> DecentralizedOptimizer:
     topo = make_topology(topology, K)
     kind = kind.lower().replace("_", "-")
+    if scales != "leaf" and kind not in ("cd-adam", "cdadam"):
+        raise ValueError("scales= selects CD-Adam's compression-scale "
+                         f"granularity; meaningless for {kind!r}")
     opt: Optional[DecentralizedOptimizer] = None
 
     # 2D (worker x model) execution is declared by the mesh itself: a
@@ -271,7 +310,8 @@ def make_optimizer(
                            moment_dtype=moment_dtype, backend=backend,
                            comm=comm, axis_name=axis_name,
                            model_parallel=model_parallel,
-                           model_axis_name=model_axis_name)
+                           model_axis_name=model_axis_name,
+                           scales=scales)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=comp,

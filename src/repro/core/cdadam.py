@@ -39,11 +39,24 @@ PyTree = Any
 @dataclasses.dataclass(frozen=True)
 class CDAdamConfig(DAdamConfig):
     gamma: float = 0.4  # paper's consensus step size
+    scales: str = "leaf"  # compression-scale granularity: 'leaf' keeps the
+    #                       reference per-(worker, leaf) L1 scales;
+    #                       'worker' opts into ONE scale per worker,
+    #                       computed by a single fused kernel pass over the
+    #                       whole resident buffer (backend='pallas' only)
 
     def validate(self) -> None:  # type: ignore[override]
         super().validate()
         if not 0 < self.gamma <= 1:
             raise ValueError("gamma must be in (0, 1]")
+        if self.scales not in ("leaf", "worker"):
+            raise ValueError(f"unknown scales {self.scales!r} "
+                             "(use 'leaf' or 'worker')")
+        if self.scales == "worker" and self.backend != "pallas":
+            raise ValueError(
+                "scales='worker' is the fused whole-buffer compressor: one "
+                "kernel pass over the resident packed buffer; it requires "
+                "backend='pallas' (the reference path compresses per leaf)")
 
 
 class CDAdamState(NamedTuple):
@@ -248,6 +261,12 @@ def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
     byte count on the wire when the dim is sharded."""
     from repro.kernels import ops
 
+    if cfg.scales == "worker":
+        raise ValueError(
+            "scales='worker' is the whole-buffer pass over the RESIDENT "
+            "packed state; the pytree (repack) pallas path compresses per "
+            "leaf — use the packed-resident runtime (opt.init's default)")
+
     x_half, mom, hat_self, hat_nbrs = state_half
     x_new = _mix_with_hats(x_half, hat_self, hat_nbrs, topo, cfg)
 
@@ -308,6 +327,33 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
     lrows = spec.local_rows
     maxis = (cfg.model_axis_name
              if getattr(cfg, "model_parallel", 1) > 1 else None)
+    axis = cfg.axis_name if cfg.comm == "axis" else None
+
+    if cfg.scales == "worker":
+        # Fused whole-buffer compressor: ONE kernel-pair pass over the
+        # entire resident buffer with a single scale per worker — the
+        # mean |delta| over the worker's whole true parameter vector
+        # (padding contributes 0 to the sum and is excluded from the
+        # divisor; on a 2D mesh the |delta| partials psum over 'model' so
+        # every shard computes the identical global scale). Deliberately
+        # coarser than the reference per-(worker, leaf) semantics — the
+        # opt-in trade: one kernel launch and a 4-byte scale payload
+        # instead of L of each.
+        q_buf, w_scales, new_hat_buf = ops.sign_compress_stacked(
+            x_new, state_half.hat_buf, n_true=spec.n, reduce_axis=maxis)
+
+        def upd_w(hn, shift):
+            q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
+            sc_recv = dadam.shift_worker(w_scales, shift, topo.K, axis)
+            return hn + (sc_recv[:, None, None]
+                         * q_recv.astype(jnp.float32)).astype(hn.dtype)
+
+        new_hat_nbrs = tuple(upd_w(hn, s) for s, hn in
+                             zip(topo.offsets, state_half.hat_nbr_bufs))
+        return PackedCDAdamState(x_new, state_half.m, state_half.v,
+                                 state_half.count, new_hat_buf,
+                                 new_hat_nbrs, spec, state_half.spec_m)
+
     q_parts, scale_cols, hat_parts = [], [], []
     for (r0, r1), size in zip(ranges, spec.sizes):
         q_l, s_l, h_l = ops.sign_compress_stacked(
@@ -322,7 +368,6 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
 
     # broadcast the per-(worker, leaf) scale over each leaf's row range
     rows_per_leaf = np.array([r1 - r0 for r0, r1 in ranges])
-    axis = cfg.axis_name if cfg.comm == "axis" else None
 
     def upd(hn, shift):
         q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)

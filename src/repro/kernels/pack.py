@@ -195,6 +195,80 @@ def _check_congruent(leaves, spec: PackSpec) -> None:
         raise ValueError(f"tree does not match spec: {got} vs {spec.shapes}")
 
 
+def local_chunk_elems(spec: PackSpec) -> Tuple[int, ...]:
+    """Per-leaf element count of ONE row-shard block's slice of the leaf
+    (the whole padded segment when ``row_shards == 1``). Requires the
+    leaf-aligned layout. These are the static slice lengths every shard
+    shares — the shard-invariance the 2D grad pipeline is built on."""
+    if not spec.leaf_aligned:
+        raise ValueError("local_chunk_elems needs a leaf_align=True spec")
+    return _shard_chunks(spec)
+
+
+def unpack_local(buf: jax.Array, spec: PackSpec) -> PyTree:
+    """Per-leaf *local slices* of one row-shard block of a (row-sharded)
+    packed buffer — the model-parallel counterpart of :func:`unpack`.
+
+    ``buf`` is one shard's ``(K_local, local_rows, LANE)`` block (what a
+    device holds inside a 2D ``shard_map``; ``K_local`` is usually 1).
+    Returns a pytree congruent with the spec's treedef whose leaf ``i`` is
+    the flat ``(K_local, local_chunk_elems(spec)[i])`` slice of that leaf's
+    local row range, cast to the leaf's dtype. Padding slots are KEPT
+    (zero-filled by ``pack``), so chunk ``j`` is exactly elements
+    ``[j*c, (j+1)*c)`` of the padded flat leaf: the layout is
+    shard-invariant, no cross-device dependence, and concatenating the M
+    chunks reproduces :func:`unpack`.
+
+    Built from plain slicing, so it is linear and jax-differentiable: the
+    AD transpose of ``unpack_local`` deposits cotangents straight back
+    into the local block (zeros in the inter-leaf padding) — gradients of
+    a loss evaluated on local slices arrive packed, per shard, for free.
+    """
+    if not spec.stacked:
+        raise ValueError("unpack_local needs a stacked spec")
+    chunks = local_chunk_elems(spec)
+    if buf.ndim != 3 or buf.shape[1] * buf.shape[2] != spec.local_rows * LANE:
+        raise ValueError(
+            f"unpack_local expects one (K_local, {spec.local_rows}, {LANE}) "
+            f"row-shard block; got {tuple(buf.shape)}")
+    flat = buf.reshape(buf.shape[0], -1)
+    leaves = [flat[:, o:o + c].astype(dt)
+              for o, c, dt in zip(spec.offsets, chunks, spec.dtypes)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def mirror_local(tree: PyTree, spec: PackSpec, shard_idx) -> PyTree:
+    """Slice a *replicated per-worker* pytree into the local-chunk layout
+    of shard ``shard_idx`` — the congruence partner of :func:`unpack_local`
+    for data that is NOT packed (batch targets, masks, regularizer
+    anchors). Leaf shapes are the per-worker shapes (no leading K dim).
+
+    Returns flat ``(local_chunk_elems[i],)`` leaves, zero-padded exactly
+    like the packed layout, so elementwise losses can be evaluated
+    chunk-against-chunk with a single psum over the model axis.
+    ``shard_idx`` may be a traced value (``jax.lax.axis_index``) — the
+    slice start is dynamic but the slice length is static."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if treedef != spec.treedef:
+        raise ValueError(f"tree does not match spec treedef: {treedef} "
+                         f"vs {spec.treedef}")
+    chunks = local_chunk_elems(spec)
+    got = tuple(tuple(l.shape) for l in leaves)
+    want = tuple(s[1:] for s in spec.shapes)
+    if got != want:
+        raise ValueError(
+            f"mirror_local needs per-worker leaf shapes {want}; got {got}")
+    idx = jnp.asarray(shard_idx, jnp.int32)
+    out = []
+    for leaf, c, sz in zip(leaves, chunks, spec.sizes):
+        flat = leaf.reshape(-1)
+        seg = c * spec.row_shards
+        if seg > sz:
+            flat = jnp.pad(flat, (0, seg - sz))
+        out.append(jax.lax.dynamic_slice(flat, (idx * c,), (c,)))
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
 def _shard_chunks(spec: PackSpec) -> Tuple[int, ...]:
     """Per-leaf element count within one shard block (== full segment when
     row_shards == 1)."""

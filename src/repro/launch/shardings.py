@@ -283,6 +283,22 @@ def tree_shardings(plan: ShardingPlan, sds_tree: PyTree, *, stacked: bool,
     return jax.tree_util.tree_map_with_path(rule, sds_tree)
 
 
+def loss_param_constraints(plan: ShardingPlan, params: PyTree) -> PyTree:
+    """Thread the plan's head-aware ``param_pspec`` rules into a loss:
+    apply each stacked parameter leaf's PartitionSpec as an in-graph
+    sharding constraint. This is how the grad pipeline's packed-GSPMD 2D
+    path (``train.grad``, ``mode='axis'`` plans) keeps matmul operands
+    ``P(..., 'model')`` through the differentiate-through-unpack loss
+    instead of letting GSPMD replicate whole per-worker parameter sets."""
+
+    def one(path, leaf):
+        spec = param_pspec(plan, path, tuple(leaf.shape), stacked=True)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(plan.mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
 # ------------------------------ batch specs ----------------------------------
 
 

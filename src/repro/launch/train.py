@@ -20,6 +20,7 @@ from repro.configs import get_arch, get_reduced, list_archs
 from repro.core import make_optimizer
 from repro.data import lm_batch
 from repro.launch.mesh import make_worker_mesh
+from repro.launch.shardings import make_plan
 from repro.models import build_model
 from repro.train import DecentralizedTrainer
 
@@ -77,6 +78,10 @@ def main() -> None:
                          "worker x model mesh; the packed state's row dim "
                          "is sharded M-ways, gossip still crosses only "
                          "the worker axis) — needs workers * M devices")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches per step "
+                         "(must divide --batch); divides activation "
+                         "memory by this factor in every backend")
     ap.add_argument("--skew", type=float, default=0.5,
                     help="non-IID-ness of worker shards")
     ap.add_argument("--ckpt", default="")
@@ -109,7 +114,15 @@ def main() -> None:
                          period=args.period, topology=args.topology,
                          gamma=args.gamma, compressor=args.compressor,
                          backend=args.backend, comm=args.comm, mesh=mesh)
-    trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt)
+    # 2D mesh: thread the head-aware mode='axis' sharding rules into the
+    # loss (grad pipeline packed-GSPMD path) so matmul operands stay
+    # P(..., 'model') instead of replicating whole per-worker param sets
+    plan = (make_plan(arch, mesh, multi_pod=False, mode="axis")
+            if args.model_parallel > 1 else None)
+    trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt,
+                                   microbatch=args.microbatch, plan=plan,
+                                   sharded_loss=getattr(api, "sharded_loss",
+                                                        None))
     params = api.init(jax.random.PRNGKey(0))
     state = trainer.init(params)
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -31,6 +31,13 @@ class ModelAPI:
     loss: Callable[..., jax.Array]
     prefill: Callable[..., Tuple[jax.Array, Any]]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
+    # Optional explicitly model-parallel loss for the 2D (worker x model)
+    # grad pipeline: ``sharded_loss(chunks, batch, ctx)`` evaluated per
+    # shard from local packed row-shard slices (see train/grad.py
+    # ShardCtx). Families that leave this None fall back to the
+    # packed-GSPMD path — the trainer threads the sharding plan's
+    # head-aware param_pspec rules into ``loss`` instead.
+    sharded_loss: Callable[..., jax.Array] = None
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:

@@ -1,3 +1,7 @@
+from repro.train.grad import (GradPipeline, ShardCtx, make_grad_pipeline,
+                              make_worker_grad, row_parallel_dot)
 from repro.train.loop import DecentralizedTrainer, TrainLog, stack_params
 
-__all__ = ["DecentralizedTrainer", "TrainLog", "stack_params"]
+__all__ = ["DecentralizedTrainer", "TrainLog", "stack_params",
+           "GradPipeline", "ShardCtx", "make_grad_pipeline",
+           "make_worker_grad", "row_parallel_dot"]

@@ -15,10 +15,10 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import DecentralizedOptimizer, is_packed_state
+from repro.core import DecentralizedOptimizer
 from repro.core.api import shard_over_workers
 from repro.core.dadam import consensus_error, mean_params
-from repro.kernels import pack as packing
+from repro.train.grad import make_grad_pipeline
 
 PyTree = Any
 
@@ -50,49 +50,42 @@ class TrainLog:
 class DecentralizedTrainer:
     """Stacked-K decentralized trainer.
 
-    loss_fn(params, batch) -> scalar, evaluated per worker via vmap; the
-    batch carries a leading K dim on every leaf.
+    loss_fn(params, batch) -> scalar, evaluated per worker; the batch
+    carries a leading K dim on every leaf. Gradients are produced by the
+    grad pipeline (``train.grad.make_grad_pipeline``): the reference vmap
+    path for pytree states, the differentiate-through-``packing.unpack``
+    path for packed-resident states (grads arrive packed, zero explicit
+    pack/unpack in the step), or — on a 2D worker × model mesh with a
+    ``sharded_loss`` — the model-parallel path that evaluates the loss
+    inside the shard_map directly from each device's local
+    (1, rows/M, 128) row-shard block, with no full-parameter all-gather.
+    ``microbatch`` > 1 turns on gradient accumulation in every mode.
 
     With a comm='axis' optimizer (``make_optimizer(comm='axis', mesh=...)``)
     the state lives sharded over the worker mesh axis: ``opt.init`` places
     it there, the jitted step's shard_map keeps it there, and ``fit``
     device_puts each batch's worker dim onto the axis so the per-worker
-    grads are computed where the state shard lives. On a 2D worker × model
-    mesh the batch replicates over the 'model' axis (every device of a
-    worker's model group sees the worker's whole microbatch) while the
-    resident buffer is row-sharded P('worker', 'model') — the
-    differentiate-through-unpack grad path then computes each worker's
-    loss model-parallel and GSPMD deposits the grads back into the
-    (1, rows/M, 128) row shards, psum-reducing over 'model' where the
-    loss ties shards together.
+    grads are computed where the state shard lives. On a 2D mesh the batch
+    replicates over the 'model' axis (every device of a worker's model
+    group sees the worker's whole microbatch). Without a ``sharded_loss``
+    the 2D grad path falls back to GSPMD through the row-sharded unpack —
+    pass ``plan`` (``launch.shardings.make_plan(mode='axis')``) to thread
+    its head-aware ``param_pspec`` rules into that loss as sharding
+    constraints.
     """
 
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
-                 opt: DecentralizedOptimizer):
+                 opt: DecentralizedOptimizer, *, microbatch: int = 1,
+                 sharded_loss: Optional[Callable] = None,
+                 plan: Any = None):
         self.loss_fn = loss_fn
         self.opt = opt
-        self._grad = jax.vmap(jax.value_and_grad(loss_fn))
+        self.pipeline = make_grad_pipeline(
+            loss_fn, opt, microbatch=microbatch,
+            sharded_loss=sharded_loss, plan=plan)
 
         def step(state, batch):
-            if is_packed_state(state):
-                # Packed-resident state (pallas backend): differentiate the
-                # per-worker losses THROUGH packing.unpack, w.r.t. the
-                # resident (K, rows, 128) buffer. AD's transpose of unpack
-                # deposits each worker's grads straight into its buffer
-                # slice — the grads arrive packed with zero explicit
-                # pack/unpack in the step, and the optimizer update runs
-                # entirely on resident buffers.
-                spec = state.spec
-
-                def stacked_loss(buf):
-                    losses = jax.vmap(self.loss_fn)(
-                        packing.unpack(buf, spec), batch)
-                    return jnp.sum(losses), losses
-
-                (_, losses), gbuf = jax.value_and_grad(
-                    stacked_loss, has_aux=True)(state.buf)
-                return self.opt.step(state, gbuf), jnp.mean(losses)
-            losses, grads = self._grad(self.opt.params_of(state), batch)
+            losses, grads = self.pipeline.value_and_grad(state, batch)
             return self.opt.step(state, grads), jnp.mean(losses)
 
         self._step = jax.jit(step)

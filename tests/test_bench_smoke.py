@@ -24,7 +24,26 @@ REQUIRED_KEYS = [
     "adam_hbm_bytes_unfused",
     "adam_hbm_bytes_fused_resident",
     "adam_hbm_bytes_fused_repack",
+    # compiled-step communication accounting (repro.analysis.hlo): the
+    # bench trajectory captures what crosses the wire, not just latency
+    "reference_collectives",
+    "pallas_resident_collectives",
+    "pallas_axis_collectives",
+    "pallas_axis2d_collectives",
 ]
+
+COLLECTIVE_FIELDS = {"count", "bytes", "max_bytes"}
+
+
+def check_collectives(summary):
+    """Schema of one variant's collective summary: every kind carries
+    count/bytes/max_bytes ints."""
+    assert set(summary) >= {"all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute"}
+    for kind, v in summary.items():
+        assert set(v) == COLLECTIVE_FIELDS, (kind, v)
+        for field in COLLECTIVE_FIELDS:
+            assert isinstance(v[field], int) and v[field] >= 0
 
 
 def test_fused_step_smoke(tmp_path, capsys):
@@ -42,16 +61,29 @@ def test_fused_step_smoke(tmp_path, capsys):
         assert rec["reference_us_per_step"] > 0
         assert rec["pallas_resident_us_per_step"] > 0
         assert rec["pallas_repack_us_per_step"] > 0
+        # non-sharded variants always compile -> always have collectives
+        check_collectives(rec["reference_collectives"])
+        check_collectives(rec["pallas_resident_collectives"])
         # device-gated paths: real numbers when the devices exist, an
         # explicit skip reason when not (never silently absent)
         if jax.device_count() >= 2:
             assert rec["pallas_axis_us_per_step"] > 0
+            check_collectives(rec["pallas_axis_collectives"])
         else:
             assert rec["pallas_axis_skipped"]
+            assert rec["pallas_axis_collectives"] is None
         if jax.device_count() >= 4:
             assert rec["pallas_axis2d_us_per_step"] > 0
+            check_collectives(rec["pallas_axis2d_collectives"])
+            # the 2D-step regression the CI summary surfaces per push:
+            # gossip crosses only 'worker' (permutes), never a gather
+            assert rec["pallas_axis2d_collectives"]["all-gather"][
+                "count"] == 0
+            assert rec["pallas_axis2d_collectives"]["collective-permute"][
+                "count"] > 0
         else:
             assert rec["pallas_axis2d_skipped"]
+            assert rec["pallas_axis2d_collectives"] is None
     cd = next(r for r in record["records"] if r["kind"] == "cd-adam")
     assert cd["wire_bytes_per_round"] > 0
 
