@@ -1,3 +1,3 @@
-from repro.checkpoint.io import restore, save
+from repro.checkpoint.io import place_like, restore, save
 
-__all__ = ["save", "restore"]
+__all__ = ["save", "restore", "place_like"]

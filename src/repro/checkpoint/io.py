@@ -48,12 +48,45 @@ def _is_packed(x: Any) -> bool:
     return isinstance(x, _packed_types())
 
 
+def _has_transient(x: Any) -> bool:
+    """Reference optimizer states carrying live straggler-comm buffers
+    (D-Adam ``stale`` / CD-Adam ``pending``): transient by contract —
+    stripped on save, rebuilt cold on restore."""
+    from repro.core.cdadam import CDAdamState
+    from repro.core.dadam import DAdamState
+    return (isinstance(x, (DAdamState, CDAdamState))
+            and x[-1] is not None)
+
+
+def _needs_adapt(x: Any) -> bool:
+    return _is_packed(x) or _has_transient(x)
+
+
+def _sans_transient(x: Any) -> Any:
+    from repro.core import cdadam, dadam
+    if isinstance(x, dadam.PackedDAdamState):
+        return x.with_stale(None)
+    if isinstance(x, cdadam.PackedCDAdamState):
+        return x.with_pending(None)
+    if isinstance(x, dadam.DAdamState):
+        return x._replace(stale=None)
+    if isinstance(x, cdadam.CDAdamState):
+        return x._replace(pending=None)
+    return x
+
+
+def _portable_of(x: Any) -> Any:
+    """The backend-agnostic checkpoint form of one optimizer state:
+    packed-resident states unpack (which drops transient buffers),
+    reference states shed their transient field."""
+    return x.unpacked() if _is_packed(x) else _sans_transient(x)
+
+
 def _to_portable(tree: PyTree) -> PyTree:
     """Replace packed-resident optimizer states by their unpacked
-    (backend-portable) NamedTuple equivalents, leaving the rest alone."""
-    return jax.tree_util.tree_map(
-        lambda x: x.unpacked() if _is_packed(x) else x, tree,
-        is_leaf=_is_packed)
+    (backend-portable) NamedTuple equivalents and strip transient
+    straggler-comm buffers, leaving the rest alone."""
+    return jax.tree_util.tree_map(_portable_of, tree, is_leaf=_needs_adapt)
 
 
 def _placed_like(arr: Any, ref: Any) -> Any:
@@ -63,6 +96,72 @@ def _placed_like(arr: Any, ref: Any) -> Any:
     if isinstance(ref, jax.Array):
         return jax.device_put(arr, ref.sharding)
     return arr
+
+
+def _cold_stale(st: Any) -> Any:
+    """A COLD D-Adam staleness buffer shaped/placed like ``st``: zero
+    payloads and ``COLD_AGE`` ages, so the first gossip round refuses the
+    buffer and falls through to whatever arrives fresh."""
+    from repro.core import dadam
+    bufs = jax.tree_util.tree_map(
+        lambda b: _placed_like(jnp.zeros_like(b), b), st.bufs)
+    age = _placed_like(jnp.full_like(st.age, dadam.COLD_AGE), st.age)
+    return dadam.StaleBufs(bufs, age)
+
+
+def _cold_pending(pending: Any) -> Any:
+    """COLD CD-Adam delay rings: all-zero payload slots, which decode to
+    zero hat updates (sign(0) scale 0) until real traffic refills them."""
+    return jax.tree_util.tree_map(
+        lambda r: _placed_like(jnp.zeros_like(r), r), pending)
+
+
+def _with_cold_transient(out: Any, orig: Any) -> Any:
+    from repro.core import cdadam, dadam
+    if isinstance(orig, dadam.PackedDAdamState) and orig.stale is not None:
+        return out.with_stale(_cold_stale(orig.stale))
+    if isinstance(orig, cdadam.PackedCDAdamState) and orig.pending is not None:
+        return out.with_pending(_cold_pending(orig.pending))
+    if isinstance(orig, dadam.DAdamState) and orig.stale is not None:
+        return out._replace(stale=_cold_stale(orig.stale))
+    if isinstance(orig, cdadam.CDAdamState) and orig.pending is not None:
+        return out._replace(pending=_cold_pending(orig.pending))
+    return out
+
+
+def place_like(portable: PyTree, like: PyTree) -> PyTree:
+    """Adapt a portable (backend-agnostic) state tree into ``like``'s
+    backend layout, device placement and transient-comm structure.
+
+    Packed-resident optimizer states in ``like`` are repacked INTO THE
+    LIKE-STATE'S LAYOUT (a 2D worker x model state keeps its packed rows
+    row-sharded M-ways) and every buffer is re-placed with the live
+    state's sharding. Live straggler-comm buffers (D-Adam ``stale`` /
+    CD-Adam ``pending``) are rebuilt COLD — zero payloads with COLD_AGE
+    ages, all-zero delay rings — rather than copied from ``like``: a
+    restored or resized worker holds no valid in-flight neighbor traffic.
+    Plain array leaves are re-placed with their ``like`` counterpart's
+    sharding. Shared by ``restore`` and the elastic-membership resize
+    path (``repro.core.elastic``)."""
+    outer_leaves, outer_td = jax.tree_util.tree_flatten(
+        like, is_leaf=_needs_adapt)
+    slots = outer_td.flatten_up_to(portable)
+
+    def adapt(orig, slot):
+        if _is_packed(orig):
+            repack = type(orig).from_unpacked(
+                slot, row_shards=getattr(orig.spec, "row_shards", 1))
+            out = jax.tree_util.tree_map(
+                _placed_like, repack, _sans_transient(orig))
+        elif _has_transient(orig):
+            out = jax.tree_util.tree_map(
+                _placed_like, slot, _sans_transient(orig))
+        else:
+            return _placed_like(slot, orig)
+        return _with_cold_transient(out, orig)
+
+    return outer_td.unflatten(
+        [adapt(orig, slot) for orig, slot in zip(outer_leaves, slots)])
 
 
 def _path_str(path) -> str:
@@ -113,32 +212,18 @@ def save(path: str, tree: PyTree, *, step: int = 0,
 def restore(path: str, like: PyTree) -> Tuple[PyTree, int]:
     """Restore into the structure of ``like`` (shape/dtype validated).
 
-    ``like`` may contain packed-resident optimizer states: the checkpoint
-    (always stored portable) is restored into their unpacked structure and
-    repacked, so the same file serves both backends."""
+    ``like`` may contain packed-resident optimizer states or reference
+    states with live straggler-comm buffers: the checkpoint (always
+    stored portable) is restored into the portable structure and adapted
+    back via ``place_like``, so the same file serves both backends and
+    comm state restarts COLD."""
     outer_leaves, outer_td = jax.tree_util.tree_flatten(
-        like, is_leaf=_is_packed)
-    if any(_is_packed(l) for l in outer_leaves):
+        like, is_leaf=_needs_adapt)
+    if any(_needs_adapt(l) for l in outer_leaves):
         portable_like = outer_td.unflatten(
-            [l.unpacked() if _is_packed(l) else l for l in outer_leaves])
+            [_portable_of(l) for l in outer_leaves])
         restored, step = restore(path, portable_like)
-        slots = outer_td.flatten_up_to(restored)
-
-        def repacked(orig, slot):
-            if not _is_packed(orig):
-                return slot
-            # repack INTO THE LIKE-STATE'S LAYOUT (a 2D worker x model
-            # state keeps its packed rows row-sharded M-ways), then
-            # re-place each buffer with the live state's sharding
-            # (mesh-portable: the checkpoint bytes are layout- and
-            # placement-agnostic)
-            repack = type(orig).from_unpacked(
-                slot, row_shards=getattr(orig.spec, "row_shards", 1))
-            return jax.tree_util.tree_map(_placed_like, repack, orig)
-
-        return outer_td.unflatten(
-            [repacked(orig, slot)
-             for orig, slot in zip(outer_leaves, slots)]), step
+        return place_like(restored, like), step
     with open(path + ".json") as f:
         side = json.load(f)
     data = np.load(path)

@@ -1,15 +1,41 @@
 """Core: the paper's contribution — D-Adam / CD-Adam decentralized adaptive
-optimization with periodic + compressed gossip."""
-from repro.core.api import DecentralizedOptimizer, is_packed_state, make_optimizer
+optimization with periodic + compressed gossip, time-varying topology
+schedules, straggler-tolerant gossip and elastic worker membership."""
+from repro.core.api import (
+    DecentralizedOptimizer,
+    is_packed_state,
+    make_optimizer,
+    resolve_topology,
+)
 from repro.core.cdadam import CDAdamConfig, CDAdamState, PackedCDAdamState
 from repro.core.compression import Compressor, make_compressor
 from repro.core.dadam import AdamMoments, DAdamConfig, DAdamState, PackedDAdamState
-from repro.core.topology import Topology, make_topology, spectral_gap
+from repro.core.elastic import resize_state
+from repro.core.schedule import (
+    TopologySchedule,
+    make_schedule,
+    one_peer_exponential,
+    randomized_rings,
+    static_schedule,
+)
+from repro.core.topology import (
+    GridShift,
+    PermShift,
+    Topology,
+    make_topology,
+    offsets_matrix,
+    spectral_gap,
+)
 
 __all__ = [
     "DecentralizedOptimizer", "make_optimizer", "is_packed_state",
+    "resolve_topology",
     "DAdamConfig", "DAdamState", "PackedDAdamState", "AdamMoments",
     "CDAdamConfig", "CDAdamState", "PackedCDAdamState",
     "Compressor", "make_compressor",
     "Topology", "make_topology", "spectral_gap",
+    "GridShift", "PermShift", "offsets_matrix",
+    "TopologySchedule", "make_schedule", "static_schedule",
+    "one_peer_exponential", "randomized_rings",
+    "resize_state",
 ]

@@ -50,10 +50,14 @@ import jax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+import numpy as np
+
 from repro.core import baselines, cdadam, dadam
+from repro.core import schedule as _sched
 from repro.core.cdadam import CDAdamConfig, PackedCDAdamState
 from repro.core.compression import Compressor, make_compressor
 from repro.core.dadam import DAdamConfig, PackedDAdamState
+from repro.core.schedule import TopologySchedule, make_schedule
 from repro.core.topology import Topology, make_topology
 from repro.kernels import pack as _pack
 
@@ -194,7 +198,7 @@ def _with_axis_execution(opt: "DecentralizedOptimizer", mesh: Any,
 @dataclasses.dataclass(frozen=True)
 class DecentralizedOptimizer:
     name: str
-    topo: Topology
+    topo: "Topology | TopologySchedule"
     cfg: Any
     compressor: Optional[Compressor]
     init: Callable[[PyTree], Any]
@@ -224,7 +228,19 @@ class DecentralizedOptimizer:
         # shift structure) the offsets are empty/unused and the true degree
         # comes from the weight matrix's off-diagonal support.
         mixing = getattr(self.cfg, "mixing", "roll")
-        if self.topo.offsets and mixing != "dense":
+        if isinstance(self.topo, TopologySchedule):
+            # Per-edge-state consumers (CD-Adam payloads, staleness
+            # buffers) exchange over the union edge set EVERY comm round
+            # so the per-edge state stays aligned across the cycle; plain
+            # D-Adam gossip only touches the round's own entry, so its
+            # per-round wire cost is the cycle-average degree.
+            if (self.compressor is not None
+                    or (getattr(self.cfg, "staleness", None) or 0) > 0):
+                deg = len(self.topo.union_offsets())
+            else:
+                deg = float(np.mean([len(e.offsets)
+                                     for e in self.topo.entries]))
+        elif self.topo.offsets and mixing != "dense":
             deg = len(self.topo.offsets)
         else:
             deg = len(self.topo.neighbors_of(0))
@@ -238,11 +254,28 @@ class DecentralizedOptimizer:
         return deg * tree_wire_bytes(self.compressor, per_worker)
 
 
+def resolve_topology(topology: "str | Topology | TopologySchedule",
+                     K: int) -> "Topology | TopologySchedule":
+    """A string names either a static zoo graph (-> Topology) or a
+    time-varying schedule family like ``one-peer-exp`` / ``rand-ring:6``
+    (-> TopologySchedule); built instances pass through (K-checked)."""
+    if isinstance(topology, (Topology, TopologySchedule)):
+        if topology.K != K:
+            raise ValueError(
+                f"topology {topology.name!r} is over K={topology.K} "
+                f"workers, optimizer has K={K}")
+        return topology
+    name = topology.partition(":")[0].replace("_", "-")
+    if name in _sched._SCHEDULES:
+        return make_schedule(topology, K)
+    return make_topology(topology, K)
+
+
 def make_optimizer(
     kind: str,
     K: int,
     *,
-    topology: str = "ring",
+    topology: "str | Topology | TopologySchedule" = "ring",
     period: int = 1,
     eta: float = 1e-3,
     beta1: float = 0.9,
@@ -259,13 +292,26 @@ def make_optimizer(
     mesh: Any = None,
     axis_name: str = "worker",
     model_axis_name: str = "model",
+    staleness: Optional[int] = None,
+    straggler_rate: float = 0.0,
+    straggler_seed: int = 0,
     **comp_kw,
 ) -> DecentralizedOptimizer:
-    topo = make_topology(topology, K)
+    topo = resolve_topology(topology, K)
     kind = kind.lower().replace("_", "-")
     if scales != "leaf" and kind not in ("cd-adam", "cdadam"):
         raise ValueError("scales= selects CD-Adam's compression-scale "
                          f"granularity; meaningless for {kind!r}")
+    if isinstance(topo, TopologySchedule):
+        if mixing == "dense":
+            raise ValueError(
+                "time-varying schedules lower per-entry rolls/ppermutes "
+                "over their shift offsets; mixing='dense' has no "
+                "round-indexed lowering (use mixing='roll')")
+        if kind in ("d-psgd", "dpsgd"):
+            raise ValueError(
+                "d-psgd is the static-graph baseline; time-varying "
+                "schedules are wired for d-adam / cd-adam")
     opt: Optional[DecentralizedOptimizer] = None
 
     # 2D (worker x model) execution is declared by the mesh itself: a
@@ -287,11 +333,14 @@ def make_optimizer(
                           mixing=mixing, moment_dtype=moment_dtype,
                           backend=backend, comm=comm, axis_name=axis_name,
                           model_parallel=model_parallel,
-                          model_axis_name=model_axis_name)
+                          model_axis_name=model_axis_name,
+                          staleness=staleness,
+                          straggler_rate=straggler_rate,
+                          straggler_seed=straggler_seed)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=None,
-            init=lambda p: dadam.init(p, cfg),
+            init=lambda p: dadam.init(p, cfg, topo),
             step=lambda s, g: dadam.step(s, g, topo, cfg),
             round=lambda s, fn, b: dadam.round_step(s, fn, b, topo, cfg),
             params_of=lambda s: s.params,
@@ -311,11 +360,13 @@ def make_optimizer(
                            comm=comm, axis_name=axis_name,
                            model_parallel=model_parallel,
                            model_axis_name=model_axis_name,
-                           scales=scales)
+                           scales=scales, staleness=staleness,
+                           straggler_rate=straggler_rate,
+                           straggler_seed=straggler_seed)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=comp,
-            init=lambda p: cdadam.init(p, cfg, topo),
+            init=lambda p: cdadam.init(p, cfg, topo, comp),
             step=lambda s, g: cdadam.step(s, g, topo, cfg, comp),
             round=lambda s, fn, b: cdadam.round_step(s, fn, b, topo, cfg,
                                                      comp),

@@ -19,7 +19,7 @@ collective-permute genuinely carries the compressed byte count.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import dadam
 from repro.core.compression import Compressor
 from repro.core.dadam import AdamMoments, DAdamConfig, init_moments, local_update
+from repro.core.schedule import TopologySchedule, comm_offsets
 from repro.core.topology import Topology
 # light import only — the Pallas kernel stack (repro.kernels.ops) loads
 # lazily inside the pallas-only paths
@@ -57,6 +58,12 @@ class CDAdamConfig(DAdamConfig):
                 "scales='worker' is the fused whole-buffer compressor: one "
                 "kernel pass over the resident packed buffer; it requires "
                 "backend='pallas' (the reference path compresses per leaf)")
+        if (self.staleness or 0) > 0 and self.comm == "axis":
+            raise ValueError(
+                "CD-Adam staleness delays payloads through per-edge ring "
+                "buffers indexed by the static delay table; the sharded "
+                "comm='axis' lowering is not wired yet — use comm='stacked' "
+                "(D-Adam supports staleness under comm='axis')")
 
 
 class CDAdamState(NamedTuple):
@@ -64,6 +71,10 @@ class CDAdamState(NamedTuple):
     moments: AdamMoments
     hat_self: PyTree               # xhat^{(k)},         stacked (K, ...)
     hat_nbrs: Tuple[PyTree, ...]   # xhat^{((k+s)%K)} per topology offset s
+    # transient straggler-tolerant payload ring buffers (cfg.staleness > 0):
+    # one ring per offset, encoded-payload pytrees with a T = tau + 1 time
+    # dim at axis 1. Stripped from checkpoints, rebuilt cold on restore.
+    pending: Optional[Tuple[PyTree, ...]] = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -80,21 +91,28 @@ class PackedCDAdamState:
     ``.hat_nbrs``) materialize only at eval/checkpoint boundaries."""
 
     __slots__ = ("buf", "m", "v", "count", "hat_buf", "hat_nbr_bufs",
-                 "spec", "spec_m")
+                 "spec", "spec_m", "pending")
 
     def __init__(self, buf, m, v, count, hat_buf, hat_nbr_bufs, spec,
-                 spec_m):
+                 spec_m, pending=None):
         self.buf, self.m, self.v, self.count = buf, m, v, count
         self.hat_buf, self.hat_nbr_bufs = hat_buf, tuple(hat_nbr_bufs)
         self.spec, self.spec_m = spec, spec_m
+        self.pending = pending
 
     def tree_flatten(self):
         return ((self.buf, self.m, self.v, self.count, self.hat_buf,
-                 self.hat_nbr_bufs), (self.spec, self.spec_m))
+                 self.hat_nbr_bufs, self.pending), (self.spec, self.spec_m))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        buf, m, v, count, hat_buf, hat_nbr_bufs, pending = children
+        return cls(buf, m, v, count, hat_buf, hat_nbr_bufs, *aux, pending)
+
+    def with_pending(self, pending) -> "PackedCDAdamState":
+        return PackedCDAdamState(self.buf, self.m, self.v, self.count,
+                                 self.hat_buf, self.hat_nbr_bufs, self.spec,
+                                 self.spec_m, pending)
 
     # ------- unpacked views: boundary use only (eval/log/checkpoint) -------
 
@@ -183,23 +201,125 @@ def _shift_payload(payload: PyTree, s: int, topo: Topology,
     )
 
 
+# ---------------- straggler-tolerant payload delay rings --------------------
+#
+# CD-Adam's staleness model differs from D-Adam's: a CHOCO hat copy is a
+# running SUM of residual payloads, so dropping (or re-applying) a payload
+# permanently desyncs worker k's copy of its neighbor's hat. Stragglers
+# therefore DELAY payloads, never drop them: each edge (k, offset i) has a
+# static delay d <= tau, incoming encoded payloads enter a ring buffer with
+# T = tau + 1 slots, and round r applies the payload pushed at round r - d —
+# in order, exactly once, at most tau rounds late.
+
+
+def _payload_delays(cfg: CDAdamConfig, K: int, deg: int) -> np.ndarray:
+    """Static (K, deg) per-edge delay table, reproducible from the seed.
+    A fraction ``straggler_rate`` of edges is persistently slow (delay
+    uniform in [1, tau]); the rest deliver same-round."""
+    tau = int(cfg.staleness or 0)
+    if tau == 0 or cfg.straggler_rate <= 0.0:
+        return np.zeros((K, deg), np.int32)
+    rs = np.random.RandomState(cfg.straggler_seed)
+    slow = rs.rand(K, deg) < cfg.straggler_rate
+    d = np.where(slow, rs.randint(1, tau + 1, size=(K, deg)), 0)
+    return d.astype(np.int32)
+
+
+def _ring_like(payload_like: PyTree, T: int) -> PyTree:
+    """A cold (zero) ring: every leaf gains a T-slot time dim at axis 1
+    (axis 0 stays the worker dim). Zero payloads decode to zero residuals,
+    so warm-up rounds apply no hat update — 'no message yet'."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros((p.shape[0], T) + p.shape[1:], p.dtype),
+        payload_like)
+
+
+def _ring_push(ring: PyTree, payload: PyTree, slot: jax.Array) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda rb, p: rb.at[:, slot].set(p.astype(rb.dtype)), ring, payload)
+
+
+def _ring_gather(ring: PyTree, sel: jax.Array) -> PyTree:
+    """Per-worker slot read: leaf (K, T, ...) + sel (K,) -> (K, ...)."""
+    def g(rb):
+        s = sel.reshape((-1,) + (1,) * (rb.ndim - 1)).astype(jnp.int32)
+        return jnp.take_along_axis(rb, s, axis=1)[:, 0]
+
+    return jax.tree_util.tree_map(g, ring)
+
+
+def _delayed_recv(recv: PyTree, ring: Optional[PyTree], d_col: np.ndarray,
+                  r: jax.Array, tau: int) -> Tuple[PyTree, Optional[PyTree]]:
+    """Push this round's received payload, pop each worker's delayed one."""
+    if ring is None:
+        return recv, None
+    T = tau + 1
+    new_ring = _ring_push(ring, recv, r % T)
+    sel = (r - jnp.asarray(d_col)) % T
+    return _ring_gather(new_ring, sel), new_ring
+
+
+# ---------------------- schedule round dispatch -----------------------------
+
+
+def _round_dispatch(operand: Any, topo: "Topology | TopologySchedule",
+                    r: jax.Array, fn: Callable[[Any, Topology], Any]) -> Any:
+    """Run ``fn(operand, view)`` for round r's topology. Schedules switch
+    over their union views — every branch sees the SAME offset tuple (per-
+    edge hat/ring state stays aligned), only the static mixing weights
+    change — so the whole cycle compiles into one step."""
+    if isinstance(topo, TopologySchedule):
+        views = topo.union_views()
+        if len(views) == 1:
+            return fn(operand, views[0])
+        return jax.lax.switch(
+            r % len(views),
+            [(lambda op, v=v: fn(op, v)) for v in views],
+            operand)
+    return fn(operand, topo)
+
+
 # ------------------------------- algorithm ---------------------------------
 
 
 def init(params_stacked: PyTree, cfg: CDAdamConfig,
-         topo: Topology) -> "CDAdamState | PackedCDAdamState":
+         topo: "Topology | TopologySchedule",
+         comp: Optional[Compressor] = None
+         ) -> "CDAdamState | PackedCDAdamState":
     cfg.validate()
-    if not topo.offsets and topo.K > 1:
+    offs = comm_offsets(topo)
+    if not offs and topo.K > 1:
         raise ValueError("CD-Adam runtime requires a shift-invariant topology")
+    tau = int(cfg.staleness or 0)
     zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
-    # xhat_0 = 0 (CHOCO convention); neighbor copies likewise.
+    # xhat_0 = 0 (CHOCO convention); neighbor copies likewise — one per
+    # offset that can EVER be active (a schedule's union edge set).
     hat_nbrs = tuple(jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
-                     for _ in topo.offsets)
+                     for _ in offs)
     state = CDAdamState(params_stacked, init_moments(params_stacked, cfg),
                         zeros, hat_nbrs)
     if cfg.backend == "pallas":
-        return PackedCDAdamState.from_unpacked(
+        packed = PackedCDAdamState.from_unpacked(
             state, row_shards=cfg.model_parallel)
+        if tau > 0:
+            K = topo.K
+            rows = packed.buf.shape[1]
+            sc_shape = ((K,) if cfg.scales == "worker"
+                        else (K, len(packed.spec.sizes)))
+            like = {"q": jnp.zeros((K, rows, packing.LANE), jnp.int8),
+                    "scale": jnp.zeros(sc_shape, jnp.float32)}
+            packed = packed.with_pending(
+                tuple(_ring_like(like, tau + 1) for _ in offs))
+        return packed
+    if tau > 0:
+        if comp is None:
+            raise ValueError(
+                "cfg.staleness > 0 rings buffer ENCODED payloads; the "
+                "reference backend needs the compressor at init (pass "
+                "comp=, as make_optimizer does)")
+        payload_like = _encode_stacked(comp, zeros)
+        state = state._replace(
+            pending=tuple(_ring_like(payload_like, tau + 1) for _ in offs))
     return state
 
 
@@ -218,9 +338,9 @@ def _mix_with_hats(x_half: PyTree, hat_self: PyTree,
 
 
 def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
-                comp: Compressor) -> CDAdamState:
+                comp: Compressor, r: jax.Array) -> CDAdamState:
     """Lines 8-11 of Alg. 2 on the half-step parameters."""
-    x_half, mom, hat_self, hat_nbrs = state_half
+    x_half, mom, hat_self, hat_nbrs, pending = state_half
 
     x_new = _mix_with_hats(x_half, hat_self, hat_nbrs, topo, cfg)
 
@@ -235,15 +355,24 @@ def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
 
     # (10)+(11b) neighbors: worker k needs q_{(k+s)%K}; the *encoded* payload
     # travels (worker shift => compressed-size collective-permute in either
-    # comm mode), then is decoded locally.
+    # comm mode), then is decoded locally. Under cfg.staleness > 0 the
+    # received payload detours through the per-edge delay ring: slow edges
+    # apply it up to tau rounds late, in order, never dropped.
+    tau = int(cfg.staleness or 0)
+    delays = _payload_delays(cfg, topo.K, len(topo.offsets))
     new_hat_nbrs = []
-    for s, hn in zip(topo.offsets, hat_nbrs):
+    new_pending = []
+    for i, (s, hn) in enumerate(zip(topo.offsets, hat_nbrs)):
         recv_enc = _shift_payload(q_enc, s, topo, cfg)
-        recv = _decode_stacked(comp, recv_enc, resid)
+        ring = None if pending is None else pending[i]
+        use_enc, ring = _delayed_recv(recv_enc, ring, delays[:, i], r, tau)
+        recv = _decode_stacked(comp, use_enc, resid)
         new_hat_nbrs.append(jax.tree_util.tree_map(
             lambda h, q: h + q.astype(h.dtype), hn, recv))
+        new_pending.append(ring)
 
-    return CDAdamState(x_new, mom, new_hat_self, tuple(new_hat_nbrs))
+    return CDAdamState(x_new, mom, new_hat_self, tuple(new_hat_nbrs),
+                       None if pending is None else tuple(new_pending))
 
 
 def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
@@ -267,7 +396,12 @@ def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
             "packed state; the pytree (repack) pallas path compresses per "
             "leaf — use the packed-resident runtime (opt.init's default)")
 
-    x_half, mom, hat_self, hat_nbrs = state_half
+    x_half, mom, hat_self, hat_nbrs, pending = state_half
+    if pending is not None:
+        raise ValueError(
+            "staleness > 0 is wired for the packed-resident pallas runtime "
+            "and the reference backend; the pytree (repack) pallas path "
+            "does not thread payload rings")
     x_new = _mix_with_hats(x_half, hat_self, hat_nbrs, topo, cfg)
 
     enc = jax.tree_util.tree_map(
@@ -291,7 +425,7 @@ def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
 
 
 def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
-                       cfg: CDAdamConfig) -> PackedCDAdamState:
+                       cfg: CDAdamConfig, r: jax.Array) -> PackedCDAdamState:
     """Lines 8-11 of Alg. 2 entirely on resident packed buffers.
 
     (8) is ONE fused consensus-mix kernel pass over the stacked buffer
@@ -328,6 +462,19 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
     maxis = (cfg.model_axis_name
              if getattr(cfg, "model_parallel", 1) > 1 else None)
     axis = cfg.axis_name if cfg.comm == "axis" else None
+    tau = int(cfg.staleness or 0)
+    pending = state_half.pending
+    delays = _payload_delays(cfg, topo.K, len(topo.offsets))
+
+    def recv_payload(i, shift, q_buf, scales):
+        """Shift (wire hop) then, under staleness, detour through offset
+        i's delay ring; returns the payload to apply plus the new ring."""
+        q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
+        sc_recv = dadam.shift_worker(scales, shift, topo.K, axis)
+        ring = None if pending is None else pending[i]
+        recv, ring = _delayed_recv({"q": q_recv, "scale": sc_recv}, ring,
+                                   delays[:, i], r, tau)
+        return recv["q"], recv["scale"], ring
 
     if cfg.scales == "worker":
         # Fused whole-buffer compressor: ONE kernel-pair pass over the
@@ -342,17 +489,18 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
         q_buf, w_scales, new_hat_buf = ops.sign_compress_stacked(
             x_new, state_half.hat_buf, n_true=spec.n, reduce_axis=maxis)
 
-        def upd_w(hn, shift):
-            q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
-            sc_recv = dadam.shift_worker(w_scales, shift, topo.K, axis)
-            return hn + (sc_recv[:, None, None]
-                         * q_recv.astype(jnp.float32)).astype(hn.dtype)
-
-        new_hat_nbrs = tuple(upd_w(hn, s) for s, hn in
-                             zip(topo.offsets, state_half.hat_nbr_bufs))
-        return PackedCDAdamState(x_new, state_half.m, state_half.v,
-                                 state_half.count, new_hat_buf,
-                                 new_hat_nbrs, spec, state_half.spec_m)
+        new_hat_nbrs, new_pending = [], []
+        for i, (s, hn) in enumerate(zip(topo.offsets,
+                                        state_half.hat_nbr_bufs)):
+            q_recv, sc_recv, ring = recv_payload(i, s, q_buf, w_scales)
+            new_hat_nbrs.append(hn + (sc_recv[:, None, None]
+                                      * q_recv.astype(jnp.float32)
+                                      ).astype(hn.dtype))
+            new_pending.append(ring)
+        return PackedCDAdamState(
+            x_new, state_half.m, state_half.v, state_half.count,
+            new_hat_buf, tuple(new_hat_nbrs), spec, state_half.spec_m,
+            None if pending is None else tuple(new_pending))
 
     q_parts, scale_cols, hat_parts = [], [], []
     for (r0, r1), size in zip(ranges, spec.sizes):
@@ -369,29 +517,33 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
     # broadcast the per-(worker, leaf) scale over each leaf's row range
     rows_per_leaf = np.array([r1 - r0 for r0, r1 in ranges])
 
-    def upd(hn, shift):
-        q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
-        sc_recv = dadam.shift_worker(scales, shift, topo.K, axis)
+    new_hat_nbrs, new_pending = [], []
+    for i, (s, hn) in enumerate(zip(topo.offsets, state_half.hat_nbr_bufs)):
+        q_recv, sc_recv, ring = recv_payload(i, s, q_buf, scales)
         sc_rows = jnp.repeat(sc_recv, rows_per_leaf, axis=1,
                              total_repeat_length=lrows)       # (K, rows)
-        return hn + (sc_rows[:, :, None]
-                     * q_recv.astype(jnp.float32)).astype(hn.dtype)
+        new_hat_nbrs.append(hn + (sc_rows[:, :, None]
+                                  * q_recv.astype(jnp.float32)
+                                  ).astype(hn.dtype))
+        new_pending.append(ring)
+    return PackedCDAdamState(
+        x_new, state_half.m, state_half.v, state_half.count, new_hat_buf,
+        tuple(new_hat_nbrs), spec, state_half.spec_m,
+        None if pending is None else tuple(new_pending))
 
-    new_hat_nbrs = tuple(upd(hn, s) for s, hn in
-                         zip(topo.offsets, state_half.hat_nbr_bufs))
-    return PackedCDAdamState(x_new, state_half.m, state_half.v,
-                             state_half.count, new_hat_buf, new_hat_nbrs,
-                             spec, state_half.spec_m)
 
-
-def _step_packed(state: PackedCDAdamState, grads: Any, topo: Topology,
+def _step_packed(state: PackedCDAdamState, grads: Any,
+                 topo: "Topology | TopologySchedule",
                  cfg: CDAdamConfig) -> PackedCDAdamState:
     po, mo, vo, count = dadam._fused_local_packed(state, grads, cfg)
     half = PackedCDAdamState(po, mo, vo, count, state.hat_buf,
-                             state.hat_nbr_bufs, state.spec, state.spec_m)
+                             state.hat_nbr_bufs, state.spec, state.spec_m,
+                             state.pending)
     if topo.K == 1:
         return half
-    comm = lambda s: _comm_round_packed(s, topo, cfg)
+    r = dadam._round_index(count, cfg.period)
+    comm = lambda s: _round_dispatch(
+        s, topo, r, lambda sh, v: _comm_round_packed(sh, v, cfg, r))
     if cfg.period == 1:
         return comm(half)
     do_comm = (count % cfg.period) == 0
@@ -399,7 +551,7 @@ def _step_packed(state: PackedCDAdamState, grads: Any, topo: Topology,
 
 
 def step(state: "CDAdamState | PackedCDAdamState", grads: PyTree,
-         topo: Topology, cfg: CDAdamConfig,
+         topo: "Topology | TopologySchedule", cfg: CDAdamConfig,
          comp: Compressor) -> "CDAdamState | PackedCDAdamState":
     """One iteration of Alg. 2 (stacked mode).
 
@@ -409,13 +561,16 @@ def step(state: "CDAdamState | PackedCDAdamState", grads: PyTree,
     if isinstance(state, PackedCDAdamState):
         return _step_packed(state, grads, topo, cfg)
     half, mom = local_update(state.params, grads, state.moments, cfg)
-    half_state = CDAdamState(half, mom, state.hat_self, state.hat_nbrs)
+    half_state = CDAdamState(half, mom, state.hat_self, state.hat_nbrs,
+                             state.pending)
     if topo.K == 1:
         return half_state
+    r = dadam._round_index(mom.count, cfg.period)
     if cfg.backend == "pallas":
-        comm = lambda s: _comm_round_pallas(s, topo, cfg)
+        once = lambda sh, v: _comm_round_pallas(sh, v, cfg)
     else:
-        comm = lambda s: _comm_round(s, topo, cfg, comp)
+        once = lambda sh, v: _comm_round(sh, v, cfg, comp, r)
+    comm = lambda s: _round_dispatch(s, topo, r, once)
     if cfg.period == 1:
         return comm(half_state)
     do_comm = (mom.count % cfg.period) == 0
@@ -438,24 +593,30 @@ def round_step(state: "CDAdamState | PackedCDAdamState",
             po, mo, vo, count = dadam._fused_local_packed(carry, grads, cfg)
             return PackedCDAdamState(po, mo, vo, count, carry.hat_buf,
                                      carry.hat_nbr_bufs, carry.spec,
-                                     carry.spec_m), ()
+                                     carry.spec_m, carry.pending), ()
 
         inner, _ = jax.lax.scan(body_packed, state, batches)
         if topo.K == 1:
             return inner
-        return _comm_round_packed(inner, topo, cfg)
+        r = dadam._round_index(inner.count, cfg.period)
+        return _round_dispatch(
+            inner, topo, r, lambda sh, v: _comm_round_packed(sh, v, cfg, r))
 
     def body(carry: CDAdamState, batch):
         grads = grad_fn(carry.params, batch)
         half, mom = local_update(carry.params, grads, carry.moments, cfg)
-        return CDAdamState(half, mom, carry.hat_self, carry.hat_nbrs), ()
+        return CDAdamState(half, mom, carry.hat_self, carry.hat_nbrs,
+                           carry.pending), ()
 
     inner, _ = jax.lax.scan(body, state, batches)
     if topo.K == 1:
         return inner
+    r = dadam._round_index(inner.moments.count, cfg.period)
     if cfg.backend == "pallas":
-        return _comm_round_pallas(inner, topo, cfg)
-    return _comm_round(inner, topo, cfg, comp)
+        once = lambda sh, v: _comm_round_pallas(sh, v, cfg)
+    else:
+        once = lambda sh, v: _comm_round(sh, v, cfg, comp, r)
+    return _round_dispatch(inner, topo, r, once)
 
 
 # The pre-unification ``CDAdamAxisState`` / ``comm_round_axis`` duplicate

@@ -40,7 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import Topology
+from repro.core.schedule import TopologySchedule, comm_offsets
+from repro.core.topology import GridShift, Topology, offset_perm
 # the pack layer is dependency-light (no Pallas import); the kernel stack
 # itself (repro.kernels.ops) is imported lazily inside the pallas-only
 # paths so backend='reference' users never pay for it
@@ -48,6 +49,11 @@ from repro.kernels import pack as packing
 from repro.kernels.pack import BLOCK_ROWS
 
 PyTree = Any
+
+# staleness ages start "infinitely old" so the FIRST gossip round always
+# takes a fresh payload (cold buffers never mix in); half of int32 max so
+# age + 1 cannot overflow
+COLD_AGE = np.int32(2**30)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +82,13 @@ class DAdamConfig:
                                 # step runs on a (1, rows/M, 128) shard
     model_axis_name: str = "model"  # mesh axis carrying the inner model
                                 # shards when model_parallel > 1
+    staleness: Optional[int] = None  # straggler-tolerant gossip: mix the
+                                # last-arrived neighbor payload, at most
+                                # tau rounds old (None = synchronous;
+                                # tau=0 == synchronous bit-for-bit)
+    straggler_rate: float = 0.0  # probability a neighbor payload misses a
+                                # round (deterministic per straggler_seed)
+    straggler_seed: int = 0
 
     def validate(self) -> None:
         if not 0 <= self.beta1 < 1 or not 0 <= self.beta2 < 1:
@@ -121,6 +134,28 @@ class DAdamConfig:
                 "backend='pallas' implements the paper's Alg. 1 update "
                 "(no bias correction); use backend='reference' for "
                 "bias_correction=True")
+        if self.staleness is not None:
+            if self.staleness < 0:
+                raise ValueError(
+                    f"staleness bound tau must be >= 0, got {self.staleness}")
+            if self.mixing == "dense":
+                raise ValueError(
+                    "staleness-bounded gossip double-buffers per-offset "
+                    "neighbor payloads; it requires the shift lowering "
+                    "(mixing='roll')")
+            if self.model_parallel > 1:
+                raise ValueError(
+                    "staleness buffers are per-worker payload copies and "
+                    "are not row-sharded; staleness requires "
+                    "model_parallel == 1")
+        if not 0.0 <= self.straggler_rate < 1.0:
+            raise ValueError(
+                f"straggler_rate must be in [0, 1), got "
+                f"{self.straggler_rate}")
+        if self.straggler_rate > 0.0 and self.staleness is None:
+            raise ValueError(
+                "straggler_rate > 0 models delayed payload arrivals and "
+                "needs a staleness bound (set staleness=tau)")
 
 
 class AdamMoments(NamedTuple):
@@ -211,17 +246,36 @@ def local_update(
 # ------------------------------- gossip ------------------------------------
 
 
-def shift_worker(x: jax.Array, s: int, K: int,
+def shift_worker(x: jax.Array, s: Any, K: int,
                  axis_name: Optional[str] = None) -> jax.Array:
-    """Worker k reads worker (k + s) % K's value — THE primitive both comm
-    modes share. comm='stacked' (``axis_name=None``): a roll over the
-    leading worker dim, ``roll(x, -s, axis=0)[k] == x[(k + s) % K]``.
-    comm='axis': a ``ppermute`` over the mesh axis, shipping exactly one
+    """Worker k reads worker ``src(k)``'s value — THE primitive both comm
+    modes share, for every offset kind: a plain int is the circulant
+    ``src(k) = (k + s) % K``, a :class:`~repro.core.topology.GridShift` the
+    row-wrap-aware torus neighbor, a ``PermShift`` an explicit permutation.
+
+    comm='stacked' (``axis_name=None``): a roll (or gather, for explicit
+    permutations) over the leading worker dim. comm='axis': a ``ppermute``
+    over the mesh axis built from the offset's permutation — round-indexed
+    schedules just switch between such perms — shipping exactly one
     neighbor block per offset on the wire."""
-    if axis_name is None:
-        return jnp.roll(x, -s, axis=0) if x.ndim >= 1 else x
-    perm = [((k + s) % K, k) for k in range(K)]  # (src, dst) pairs
-    return jax.lax.ppermute(x, axis_name, perm)
+    if axis_name is not None:
+        if isinstance(s, (int, np.integer)):
+            perm = [((k + int(s)) % K, k) for k in range(K)]  # (src, dst)
+        else:
+            src = offset_perm(s, K)
+            perm = [(int(src[k]), k) for k in range(K)]
+        return jax.lax.ppermute(x, axis_name, perm)
+    if x.ndim < 1:
+        return x
+    if isinstance(s, (int, np.integer)):
+        return jnp.roll(x, -int(s), axis=0)
+    if isinstance(s, GridShift):
+        # roll the worker dim as its (rows, cols) grid — the column roll
+        # wraps within the row, which is what the flat circulant got wrong
+        xg = x.reshape((s.rows, s.cols) + x.shape[1:])
+        xg = jnp.roll(xg, (-s.dr, -s.dc), axis=(0, 1))
+        return xg.reshape(x.shape)
+    return jnp.take(x, jnp.asarray(offset_perm(s, K)), axis=0)
 
 
 def gossip_dense(params: PyTree, W: jax.Array | np.ndarray) -> PyTree:
@@ -298,6 +352,108 @@ def gossip(params: PyTree, topo: Topology, cfg: DAdamConfig) -> PyTree:
 gossip_stacked = gossip
 
 
+# -------------------- straggler-tolerant (stale) gossip ---------------------
+
+
+class StaleBufs(NamedTuple):
+    """Double-buffered neighbor payloads for staleness-bounded gossip.
+
+    ``bufs[i]`` holds the payload last taken from offset i's neighbor (same
+    structure as the params / packed buffer); ``age[k, i]`` counts rounds
+    since worker k last refreshed it. A round mixes the buffered copy while
+    it is younger than the bound tau, and MUST take a fresh payload once
+    ``age >= tau`` — so no mixed-in value is ever more than tau rounds old,
+    and tau=0 degenerates to today's synchronous gossip bit-for-bit."""
+
+    bufs: Tuple[Any, ...]
+    age: jax.Array            # (K, deg) int32; (1, deg) inside shard_map
+
+
+def _round_index(count: jax.Array, period: int) -> jax.Array:
+    """0-based communication-round index at a comm step (count = p, 2p...)."""
+    return jnp.maximum(count // period - 1, 0)
+
+
+def _local_worker_rows(arr: jax.Array, cfg: DAdamConfig) -> jax.Array:
+    """Slice a (K, ...) per-worker constant down to this worker's row when
+    traced inside shard_map (comm='axis'); identity under comm='stacked'."""
+    if cfg.comm != "axis":
+        return arr
+    k = jax.lax.axis_index(cfg.axis_name)
+    return jax.lax.dynamic_slice_in_dim(arr, k, 1, axis=0)
+
+
+def _arrival_mask(cfg: DAdamConfig, r: jax.Array, K: int,
+                  deg: int) -> jax.Array:
+    """(K, deg) bool — which neighbor payloads arrive in round r. Derived
+    from the round index with a fixed seed, so every worker (and every
+    shard_map slot) agrees on the same arrival pattern without
+    communication, and a rerun reproduces the same straggler trace."""
+    local = 1 if cfg.comm == "axis" else K
+    if cfg.straggler_rate <= 0.0:
+        return jnp.ones((local, deg), bool)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.straggler_seed),
+                             jnp.asarray(r, jnp.int32))
+    mask = jax.random.uniform(key, (K, deg)) >= cfg.straggler_rate
+    return _local_worker_rows(mask, cfg)
+
+
+def init_stale(params_like: PyTree,
+               topo: "Topology | TopologySchedule") -> StaleBufs:
+    """Cold staleness buffers over ``topo``'s (union) offsets: zero
+    payloads at COLD_AGE, forcing a fresh exchange on first use."""
+    offs = comm_offsets(topo)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params_like)
+    return StaleBufs(tuple(zeros for _ in offs),
+                     jnp.full((topo.K, len(offs)), COLD_AGE, jnp.int32))
+
+
+def gossip_shift_stale(params: PyTree, stale: StaleBufs, topo: Topology,
+                       cfg: DAdamConfig, r: jax.Array
+                       ) -> Tuple[PyTree, StaleBufs]:
+    """Shift gossip with a staleness bound: round r mixes, per offset, the
+    freshly shifted payload when it arrives (or when the buffered copy hits
+    the bound tau) and the buffered <= tau-rounds-old copy otherwise. The
+    local Adam half-step never waits — this is the straggler-tolerant
+    overlap. With tau=0 every payload is forced fresh and the result is
+    bit-for-bit :func:`gossip_shift`."""
+    if not topo.offsets:
+        return params, stale
+    axis = cfg.axis_name if cfg.comm == "axis" else None
+    tau = int(cfg.staleness)
+    if tau == 0:
+        # ages are non-negative, so take = arrive | (age >= 0) is
+        # STATICALLY all-true and the buffered copies are never read:
+        # run the literal synchronous mix (bit-for-bit gossip_shift —
+        # routing payloads through buffer outputs would perturb XLA's FMA
+        # fusion by 1 ulp) and pass the untouched buffers through.
+        return (gossip_shift(params, topo, axis),
+                StaleBufs(stale.bufs, jnp.zeros_like(stale.age)))
+    arrive = _arrival_mask(cfg, r, topo.K, len(topo.offsets))
+    take = arrive | (stale.age >= tau)
+    new_age = jnp.where(take, 0, stale.age + 1).astype(stale.age.dtype)
+    new_bufs = []
+    for i, s in enumerate(topo.offsets):
+        m = take[:, i]
+
+        def pick(x, b, s=s):
+            mm = m.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(mm, shift_worker(x, s, topo.K, axis),
+                             b.astype(x.dtype))
+
+        new_bufs.append(jax.tree_util.tree_map(pick, params,
+                                               stale.bufs[i]))
+
+    def mix(x, *nbrs):
+        acc = topo.self_weight * x.astype(jnp.float32)
+        for w, nb in zip(topo.offset_weights, nbrs):
+            acc = acc + w * nb.astype(jnp.float32)
+        return acc.astype(x.dtype)
+
+    mixed = jax.tree_util.tree_map(mix, params, *new_bufs)
+    return mixed, StaleBufs(tuple(new_bufs), new_age)
+
+
 # -------------------- packed-resident gossip (pallas) ----------------------
 
 
@@ -329,7 +485,12 @@ def gossip_packed(buf: jax.Array, topo: Topology, cfg: DAdamConfig
             acc = acc + w * shift_worker(buf, s, topo.K,
                                          cfg.axis_name).astype(jnp.float32)
         return acc.astype(buf.dtype)
-    if (cfg.mixing == "dense" or not topo.offsets
+    # PermShift offsets (randomized rings) have no index-map arithmetic the
+    # fused kernel can express; they take the einsum against the entry's
+    # weight matrix (ints and GridShifts fuse)
+    fusable = all(isinstance(s, (int, np.integer)) or isinstance(s, GridShift)
+                  for s in topo.offsets)
+    if (cfg.mixing == "dense" or not topo.offsets or not fusable
             or len(topo.offsets) > MAX_FUSED_DEGREE):
         W = jnp.asarray(topo.weights, jnp.float32)
         return jnp.einsum("kj,jrc->krc", W,
@@ -338,12 +499,109 @@ def gossip_packed(buf: jax.Array, topo: Topology, cfg: DAdamConfig
                           topo.self_weight)
 
 
+def gossip_packed_stale(buf: jax.Array, stale: StaleBufs, topo: Topology,
+                        cfg: DAdamConfig, r: jax.Array
+                        ) -> Tuple[jax.Array, StaleBufs]:
+    """Staleness-bounded gossip on the resident packed buffer: the
+    payload-buffer update is elementwise over (K, rows, LANE) blocks, and
+    the mix runs as the fused payload kernel (same accumulation order as
+    ``gossip_mix``, so tau=0 is bit-for-bit the synchronous packed round).
+    Under comm='axis' each fresh take is one ppermute of the packed block;
+    a buffered take costs no wire traffic at all."""
+    from repro.kernels import ops
+    from repro.kernels.gossip import MAX_FUSED_DEGREE
+
+    if not topo.offsets:
+        return buf, stale
+    axis = cfg.axis_name if cfg.comm == "axis" else None
+    tau = int(cfg.staleness)
+    if tau == 0:
+        # statically always-fresh and the buffers are never read: run the
+        # literal synchronous packed round (see gossip_shift_stale for why
+        # this, not a masked select, is what keeps tau=0 bit-for-bit)
+        return (gossip_packed(buf, topo, cfg),
+                StaleBufs(stale.bufs, jnp.zeros_like(stale.age)))
+    arrive = _arrival_mask(cfg, r, topo.K, len(topo.offsets))
+    take = arrive | (stale.age >= tau)
+    new_age = jnp.where(take, 0, stale.age + 1).astype(stale.age.dtype)
+    used = []
+    for i, s in enumerate(topo.offsets):
+        m = take[:, i].reshape((-1, 1, 1))
+        used.append(jnp.where(m, shift_worker(buf, s, topo.K, axis),
+                              stale.bufs[i].astype(buf.dtype)))
+    if axis is None and len(used) <= MAX_FUSED_DEGREE:
+        mixed = ops.payload_mix(buf, used, topo.offset_weights,
+                                topo.self_weight)
+    else:
+        acc = topo.self_weight * buf.astype(jnp.float32)
+        for w, u in zip(topo.offset_weights, used):
+            acc = acc + w * u.astype(jnp.float32)
+        mixed = acc.astype(buf.dtype)
+    return mixed, StaleBufs(tuple(used), new_age)
+
+
+# --------------------- round dispatch (schedule-aware) ----------------------
+
+
+def _gossip_round(params: PyTree, stale: Optional[StaleBufs],
+                  topo: "Topology | TopologySchedule", cfg: DAdamConfig,
+                  r: jax.Array) -> Tuple[PyTree, Optional[StaleBufs]]:
+    """One communication round on the pytree path: schedule entries switch
+    on the (traced) round index — each branch closes over its own STATIC
+    offsets/weights, so a whole schedule still compiles to one step."""
+    def once(op, topo_r):
+        p, st = op
+        if st is None:
+            return gossip(p, topo_r, cfg), None
+        return gossip_shift_stale(p, st, topo_r, cfg, r)
+
+    if isinstance(topo, TopologySchedule):
+        # per-edge payload buffers need the SAME offset tuple every round
+        # (union views); without live buffers — no staleness, or tau=0
+        # where they are never read — each round gossips its own entry
+        use_union = stale is not None and int(cfg.staleness or 0) > 0
+        views = topo.union_views() if use_union else topo.entries
+        if len(views) == 1:
+            return once((params, stale), views[0])
+        return jax.lax.switch(
+            r % len(views),
+            [(lambda op, v=v: once(op, v)) for v in views],
+            (params, stale))
+    return once((params, stale), topo)
+
+
+def _gossip_packed_round(buf: jax.Array, stale: Optional[StaleBufs],
+                         topo: "Topology | TopologySchedule",
+                         cfg: DAdamConfig, r: jax.Array
+                         ) -> Tuple[jax.Array, Optional[StaleBufs]]:
+    """Packed twin of :func:`_gossip_round`."""
+    def once(op, topo_r):
+        b, st = op
+        if st is None:
+            return gossip_packed(b, topo_r, cfg), None
+        return gossip_packed_stale(b, st, topo_r, cfg, r)
+
+    if isinstance(topo, TopologySchedule):
+        use_union = stale is not None and int(cfg.staleness or 0) > 0
+        views = topo.union_views() if use_union else topo.entries
+        if len(views) == 1:
+            return once((buf, stale), views[0])
+        return jax.lax.switch(
+            r % len(views),
+            [(lambda op, v=v: once(op, v)) for v in views],
+            (buf, stale))
+    return once((buf, stale), topo)
+
+
 # ------------------------------ state + step -------------------------------
 
 
 class DAdamState(NamedTuple):
     params: PyTree          # stacked (K, ...) in stacked mode
     moments: AdamMoments
+    # transient straggler-tolerant payload buffers (cfg.staleness != None);
+    # stripped from checkpoints and rebuilt cold on restore
+    stale: Optional[StaleBufs] = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -361,19 +619,25 @@ class PackedDAdamState:
     pytree aux_data, so the state jits/scans/conds like a NamedTuple while
     the specs stay Python-side."""
 
-    __slots__ = ("buf", "m", "v", "count", "spec", "spec_m")
+    __slots__ = ("buf", "m", "v", "count", "spec", "spec_m", "stale")
 
-    def __init__(self, buf, m, v, count, spec, spec_m):
+    def __init__(self, buf, m, v, count, spec, spec_m, stale=None):
         self.buf, self.m, self.v, self.count = buf, m, v, count
         self.spec, self.spec_m = spec, spec_m
+        self.stale = stale
 
     def tree_flatten(self):
-        return ((self.buf, self.m, self.v, self.count),
+        return ((self.buf, self.m, self.v, self.count, self.stale),
                 (self.spec, self.spec_m))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        buf, m, v, count, stale = children
+        return cls(buf, m, v, count, *aux, stale)
+
+    def with_stale(self, stale) -> "PackedDAdamState":
+        return PackedDAdamState(self.buf, self.m, self.v, self.count,
+                                self.spec, self.spec_m, stale)
 
     # ------- unpacked views: boundary use only (eval/log/checkpoint) -------
 
@@ -434,13 +698,23 @@ def grads_buffer(grads: Any, spec: packing.PackSpec, dtype: Any,
     return packing.pack(grads, spec, dtype=dtype)
 
 
-def init(params_stacked: PyTree, cfg: DAdamConfig
+def init(params_stacked: PyTree, cfg: DAdamConfig,
+         topo: "Topology | TopologySchedule | None" = None
          ) -> "DAdamState | PackedDAdamState":
     cfg.validate()
+    if cfg.staleness is not None and topo is None:
+        raise ValueError(
+            "cfg.staleness buffers one payload per topology offset; "
+            "init needs the topology (pass topo=, as make_optimizer does)")
     state = DAdamState(params_stacked, init_moments(params_stacked, cfg))
     if cfg.backend == "pallas":
-        return PackedDAdamState.from_unpacked(
+        packed = PackedDAdamState.from_unpacked(
             state, row_shards=cfg.model_parallel)
+        if cfg.staleness is not None:
+            packed = packed.with_stale(init_stale(packed.buf, topo))
+        return packed
+    if cfg.staleness is not None:
+        state = state._replace(stale=init_stale(params_stacked, topo))
     return state
 
 
@@ -461,17 +735,23 @@ def _fused_local_packed(state: PackedDAdamState, grads: Any,
     return po, mo, vo, state.count + 1
 
 
-def _step_packed(state: PackedDAdamState, grads: Any, topo: Topology,
+def _step_packed(state: PackedDAdamState, grads: Any,
+                 topo: "Topology | TopologySchedule",
                  cfg: DAdamConfig) -> PackedDAdamState:
     po, mo, vo, count = _fused_local_packed(state, grads, cfg)
+    r = _round_index(count, cfg.period)
+
+    def comm(op):
+        return _gossip_packed_round(op[0], op[1], topo, cfg, r)
+
     if cfg.period == 1:
-        buf = gossip_packed(po, topo, cfg)
+        buf, stale = comm((po, state.stale))
     else:
         do_comm = (count % cfg.period) == 0
-        buf = jax.lax.cond(do_comm,
-                           lambda b: gossip_packed(b, topo, cfg),
-                           lambda b: b, po)
-    return PackedDAdamState(buf, mo, vo, count, state.spec, state.spec_m)
+        buf, stale = jax.lax.cond(do_comm, comm, lambda op: op,
+                                  (po, state.stale))
+    return PackedDAdamState(buf, mo, vo, count, state.spec, state.spec_m,
+                            stale)
 
 
 def step(
@@ -493,15 +773,18 @@ def step(
     if isinstance(state, PackedDAdamState):
         return _step_packed(state, grads, topo, cfg)
     half, mom = local_update(state.params, grads, state.moments, cfg)
+    r = _round_index(mom.count, cfg.period)
+
+    def comm(op):
+        return _gossip_round(op[0], op[1], topo, cfg, r)
+
     if cfg.period == 1:
-        return DAdamState(gossip(half, topo, cfg), mom)
-
-    def comm(x):
-        return gossip(x, topo, cfg)
-
+        new_params, stale = comm((half, state.stale))
+        return DAdamState(new_params, mom, stale)
     do_comm = (mom.count % cfg.period) == 0
-    new_params = jax.lax.cond(do_comm, comm, lambda x: x, half)
-    return DAdamState(new_params, mom)
+    new_params, stale = jax.lax.cond(do_comm, comm, lambda op: op,
+                                     (half, state.stale))
+    return DAdamState(new_params, mom, stale)
 
 
 def round_step(
@@ -527,20 +810,25 @@ def round_step(
             grads = grad_fn(carry.buf, batch)
             po, mo, vo, count = _fused_local_packed(carry, grads, cfg)
             return PackedDAdamState(po, mo, vo, count, carry.spec,
-                                    carry.spec_m), ()
+                                    carry.spec_m, carry.stale), ()
 
         inner, _ = jax.lax.scan(body_packed, state, batches)
-        return PackedDAdamState(gossip_packed(inner.buf, topo, cfg),
-                                inner.m, inner.v, inner.count,
-                                state.spec, state.spec_m)
+        buf, stale = _gossip_packed_round(
+            inner.buf, inner.stale, topo, cfg,
+            _round_index(inner.count, cfg.period))
+        return PackedDAdamState(buf, inner.m, inner.v, inner.count,
+                                state.spec, state.spec_m, stale)
 
     def body(carry: DAdamState, batch):
         grads = grad_fn(carry.params, batch)
         half, mom = local_update(carry.params, grads, carry.moments, cfg)
-        return DAdamState(half, mom), ()
+        return DAdamState(half, mom, carry.stale), ()
 
     inner, _ = jax.lax.scan(body, state, batches)
-    return DAdamState(gossip(inner.params, topo, cfg), inner.moments)
+    new_params, stale = _gossip_round(
+        inner.params, inner.stale, topo, cfg,
+        _round_index(inner.moments.count, cfg.period))
+    return DAdamState(new_params, inner.moments, stale)
 
 
 def consensus_error(params_stacked: PyTree) -> jax.Array:

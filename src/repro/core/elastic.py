@@ -1,0 +1,93 @@
+"""Elastic worker membership: resize a live optimizer state to a new K.
+
+Serverless workers join and leave mid-run. ``resize_state`` takes the
+current optimizer state (either backend) and a freshly built optimizer
+for the new world size / topology, and produces a state for the new
+optimizer that carries the surviving workers' parameters and Adam
+moments across the membership change:
+
+- **shrink** (workers leave): the trailing worker slots are dropped —
+  their consensus mass is already mixed into the survivors by prior
+  gossip rounds.
+- **grow** (workers join), ``strategy="clone"``: new slots bootstrap
+  from existing workers round-robin (``slot k -> slot k % K_old``), so
+  a joiner starts at a live model instead of cold noise.
+- **grow**, ``strategy="mean"``: new slots start at the current
+  consensus mean — the natural warm start when joiners should not
+  inherit any single worker's drift.
+
+Everything topology-shaped is rebuilt for the NEW topology: CD-Adam
+hats restart at zero (the CHOCO convention — hats re-warm within a few
+compressed rounds) and straggler-comm buffers restart COLD via
+``checkpoint.place_like``, which also repacks into the new optimizer's
+resident layout and placement. The Adam step ``count`` is preserved so
+the bias-correction schedule continues rather than restarting.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt_io
+from repro.core import dadam
+
+PyTree = Any
+
+_STRATEGIES = ("clone", "mean")
+
+
+def _resize_leaf(x: jax.Array, K_new: int, strategy: str) -> jax.Array:
+    K_old = int(x.shape[0])
+    if K_new == K_old:
+        return x
+    if K_new < K_old:
+        return x[:K_new]
+    if strategy == "clone":
+        idx = jnp.arange(K_old, K_new) % K_old
+        extra = x[idx]
+    else:  # "mean"
+        mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        extra = jnp.broadcast_to(
+            mean, (K_new - K_old,) + x.shape[1:]).astype(x.dtype)
+    return jnp.concatenate([x, extra], axis=0)
+
+
+def _resize_tree(tree: PyTree, K_new: int, strategy: str) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: _resize_leaf(x, K_new, strategy), tree)
+
+
+def resize_state(state: Any, opt_new: Any, *,
+                 strategy: str = "clone") -> Any:
+    """Carry ``state`` (D-Adam / CD-Adam, either backend) over to
+    ``opt_new``'s world size, topology and backend.
+
+    ``opt_new`` is a ``DecentralizedOptimizer`` built for the NEW
+    membership (``make_optimizer(..., n_workers=K_new, ...)``). Params
+    and Adam moments are resized along the worker axis per ``strategy``;
+    the step count survives; hats and straggler buffers restart.
+    """
+    if strategy not in _STRATEGIES:
+        raise ValueError(f"strategy must be one of {_STRATEGIES}, "
+                         f"got {strategy!r}")
+    K_new = int(opt_new.topo.K)
+    portable = ckpt_io._to_portable(state)
+    K_old = int(jax.tree_util.tree_leaves(portable.params)[0].shape[0])
+    if K_old < 1 or K_new < 1:
+        raise ValueError("world sizes must be >= 1")
+
+    params = _resize_tree(portable.params, K_new, strategy)
+    m = _resize_tree(portable.moments.m, K_new, strategy)
+    v = _resize_tree(portable.moments.v, K_new, strategy)
+
+    # A fresh init for the new optimizer supplies every topology-shaped
+    # piece (zero hats sized to the new union edge set, packed layout,
+    # cold comm buffers) — we graft the surviving params/moments into
+    # its portable form and let place_like adapt backend + placement.
+    like = opt_new.init(params)
+    like_portable = ckpt_io._to_portable(like)
+    moments = dadam.AdamMoments(m=m, v=v, count=portable.moments.count)
+    portable_new = like_portable._replace(params=params, moments=moments)
+    return ckpt_io.place_like(portable_new, like)

@@ -11,9 +11,67 @@ dense mixing matmul.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+import warnings
+from typing import List, Tuple, Union
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GridShift:
+    """Row-wrap-aware shift on a ``rows x cols`` grid flattened to
+    ``K = rows * cols``: worker ``k`` reads ``src(k)``, the grid neighbor
+    ``(r + dr, c + dc)`` with both coordinates wrapping independently.
+
+    This is NOT a flat circulant offset — ``(r, cols-1) + (0, 1)`` wraps to
+    ``(r, 0)``, not to the next row — which is exactly the torus lowering
+    bug the plain-int offsets had. ``src`` uses only ``//`` and ``%`` so it
+    works on traced ints (Pallas BlockSpec index maps)."""
+
+    dr: int
+    dc: int
+    rows: int
+    cols: int
+
+    def src(self, k):
+        r, c = k // self.cols, k % self.cols
+        return (((r + self.dr) % self.rows) * self.cols
+                + (c + self.dc) % self.cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class PermShift:
+    """An explicit worker permutation: worker ``k`` reads ``perm[k]``.
+
+    Used by topology schedules with no shift structure at all (randomized
+    rings). ``perm`` must be a bijection of range(K)."""
+
+    perm: Tuple[int, ...]
+
+    def __post_init__(self):
+        if sorted(self.perm) != list(range(len(self.perm))):
+            raise ValueError("PermShift.perm must be a permutation of "
+                             f"range({len(self.perm)})")
+
+
+Offset = Union[int, GridShift, PermShift]
+
+
+def offset_perm(off: Offset, K: int) -> np.ndarray:
+    """The source-worker index per destination worker: ``out[k]`` is the
+    worker whose value worker ``k`` reads under this offset."""
+    if isinstance(off, (int, np.integer)):
+        return (np.arange(K) + int(off)) % K
+    if isinstance(off, GridShift):
+        if off.rows * off.cols != K:
+            raise ValueError(f"GridShift {off} does not cover K={K}")
+        return np.array([off.src(k) for k in range(K)])
+    if isinstance(off, PermShift):
+        if len(off.perm) != K:
+            raise ValueError(f"PermShift has {len(off.perm)} entries, "
+                             f"expected K={K}")
+        return np.asarray(off.perm)
+    raise TypeError(f"unknown offset type {type(off).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,15 +83,18 @@ class Topology:
       weights: (K, K) symmetric doubly-stochastic mixing matrix.
       neighbors: for each worker, the list of (neighbor_rank, weight) pairs
         with neighbor != self. Self weight is ``self_weights[k]``.
-      offsets: ring-style permutation offsets covering all edges, i.e. a set
-        of integers s such that every (k, (k+s) % K) is an edge with a
-        *uniform* weight. Only populated for shift-invariant graphs (ring,
-        exponential, fully-connected); used to lower gossip as ppermutes.
+      offsets: permutation offsets covering all edges with a *uniform*
+        weight each: plain ints (ring-style circulant shifts,
+        ``k -> (k+s) % K``), :class:`GridShift` (torus row/col wrap), or
+        :class:`PermShift` (explicit permutations). Populated whenever the
+        graph decomposes into uniform-weight permutations; used to lower
+        gossip as rolls / ppermutes. ``offsets_matrix`` must equal
+        ``weights`` — the zoo-wide property test pins this.
     """
 
     name: str
     weights: np.ndarray
-    offsets: Tuple[int, ...]
+    offsets: Tuple[Offset, ...]
     offset_weights: Tuple[float, ...]
     self_weight: float
 
@@ -48,6 +109,21 @@ class Topology:
     def neighbors_of(self, k: int) -> List[Tuple[int, float]]:
         row = self.weights[k]
         return [(j, float(row[j])) for j in np.nonzero(row)[0] if j != k]
+
+
+def offsets_matrix(topo: "Topology") -> np.ndarray:
+    """The mixing matrix the shift lowering actually applies:
+    ``W[k, src] += w`` for every offset. Must equal ``topo.weights`` for the
+    roll/ppermute gossip to mix the right neighbors — the invariant the
+    torus lowering violated before offsets became wrap-aware."""
+    K = topo.K
+    W = np.zeros((K, K))
+    np.fill_diagonal(W, topo.self_weight)
+    for off, w in zip(topo.offsets, topo.offset_weights):
+        src = offset_perm(off, K)
+        for k in range(K):
+            W[k, src[k]] += w
+    return W
 
 
 def _check_doubly_stochastic(W: np.ndarray, atol: float = 1e-8) -> None:
@@ -149,14 +225,27 @@ def torus(rows: int, cols: int) -> Topology:
             for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
                 W[k, rank(r + dr, c + dc)] += w
     _check_doubly_stochastic(W)
-    # torus over a flattened axis is shift-invariant with offsets
-    # {+-1 (mod cols wrap folded in), +-cols}; exact only when rows>2, cols>2
-    offs: Tuple[int, ...] = ()
-    offw: Tuple[float, ...] = ()
-    if rows > 2 and cols > 2:
-        offs = (1, K - 1, cols, K - cols)
-        offw = (w, w, w, w)
-    return Topology("torus", W, offs, offw, w)
+    # The shift lowering: each of the four directed grid steps is a
+    # GridShift whose column wrap stays within the row (a flat +-1
+    # circulant would leak across row boundaries — the wrong-neighbor bug).
+    # Degenerate extents merge: at rows == 2 the +-row steps are the SAME
+    # permutation (weight 2w), at rows == 1 they are the identity and fold
+    # into the self weight; likewise for cols. The offsets-implied matrix
+    # therefore equals W for EVERY (rows, cols).
+    merged: dict = {}
+    for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        key = (dr % rows, dc % cols)
+        merged[key] = merged.get(key, 0.0) + w
+    sw = w
+    offs: List[Offset] = []
+    offw: List[float] = []
+    for (dr, dc), wt in merged.items():
+        if dr == 0 and dc == 0:
+            sw += wt
+        else:
+            offs.append(GridShift(dr, dc, rows, cols))
+            offw.append(wt)
+    return Topology("torus", W, tuple(offs), tuple(offw), sw)
 
 
 _REGISTRY = {
@@ -171,6 +260,16 @@ def make_topology(name: str, K: int, **kw) -> Topology:
         r = int(np.sqrt(K))
         while K % r:
             r -= 1
+        if r == 1 and K > 1:
+            # prime (or 2): the only factorization is 1 x K, whose
+            # degenerate row edges collapse into a 3/5 self-loop — a worse-
+            # conditioned ring in disguise. Use the honest ring instead.
+            warnings.warn(
+                f"torus needs a non-trivial rows x cols factorization; "
+                f"K={K} only factors as 1 x {K} (self-loop absorbs the row "
+                f"edges) — falling back to ring({K})", RuntimeWarning,
+                stacklevel=2)
+            return ring(K)
         return torus(r, K // r)
     if name not in _REGISTRY:
         raise KeyError(f"unknown topology {name!r}; have {sorted(_REGISTRY)}")

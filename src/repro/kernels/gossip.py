@@ -16,6 +16,14 @@ no per-step pack/unpack, no per-leaf tree_map launches:
     topology offset — the Pallas pipeline turns each into exactly the
     neighbor-block DMA the ring actually needs.
 
+``payload_mix``
+    The staleness-tolerant twin of ``gossip_mix``: the neighbor payloads
+    were already selected (fresh vs buffered, outside the kernel) into
+    per-offset (K, rows, LANE) buffers aligned with the destination
+    worker, so every operand reads block (k, i) — same accumulation order
+    and f32 arithmetic as ``gossip_mix``, which is what makes the tau=0
+    path bit-for-bit identical to the synchronous round.
+
 ``consensus_mix``
     CD-Adam's consensus update  out[k] = x[k] + gamma * sum_s w_s *
     (hat_s[k] - hat_self[k])  (Alg. 2 line 8) — a (deg + 2)-operand
@@ -35,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.topology import GridShift
 from repro.kernels.pack import BLOCK_ROWS, LANE  # shared tile quantum
 
 # VMEM is ~16 MiB/core; cap the operand count so (deg + 2) blocks of
@@ -69,17 +78,27 @@ def gossip_mix(x: jax.Array, offsets: Sequence[int],
     """Shift-invariant gossip over a stacked packed buffer, one VMEM pass.
 
     ``x`` is (K, rows, LANE); row-block i of output worker k reads row-block
-    i of workers k and (k + s) % K for each static offset s.
+    i of workers k and ``src(k)`` for each static offset — plain ints are
+    the circulant ``(k + s) % K``, :class:`GridShift` offsets compute the
+    row-wrap-aware torus neighbor right in the BlockSpec index map (its
+    ``src`` uses only ``//`` and ``%``, so it traces).
     """
     K, rows = _check_buf(x, block_rows)
-    offsets = tuple(int(s) for s in offsets)
+    offsets = tuple(s if isinstance(s, GridShift) else int(s)
+                    for s in offsets)
     weights = tuple(float(w) for w in offset_weights)
     if len(offsets) != len(weights):
         raise ValueError("offsets and offset_weights must align")
+    for s in offsets:
+        if isinstance(s, GridShift) and s.rows * s.cols != K:
+            raise ValueError(f"GridShift {s} does not cover K={K}")
     if not offsets:
         return x
 
-    def spec_for(shift: int) -> pl.BlockSpec:
+    def spec_for(shift) -> pl.BlockSpec:
+        if isinstance(shift, GridShift):
+            return pl.BlockSpec((1, block_rows, LANE),
+                                lambda k, i, s=shift: (s.src(k), i, 0))
         return pl.BlockSpec((1, block_rows, LANE),
                             lambda k, i, s=shift: ((k + s) % K, i, 0))
 
@@ -93,6 +112,43 @@ def gossip_mix(x: jax.Array, offsets: Sequence[int],
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x, *([x] * len(offsets)))
+
+
+def payload_mix(x: jax.Array, payloads: Sequence[jax.Array],
+                offset_weights: Sequence[float], self_weight: float, *,
+                block_rows: int = BLOCK_ROWS,
+                interpret: bool = False) -> jax.Array:
+    """Mix pre-aligned neighbor payloads into the resident packed buffer:
+
+        out[k] = w_self * x[k] + sum_i w_i * payloads[i][k]
+
+    ``payloads[i]`` already holds offset i's neighbor value for every
+    destination worker (the staleness runtime selects fresh-vs-buffered
+    copies before the kernel), so all operands use identity index maps —
+    same kernel body, weight order and f32 accumulation as ``gossip_mix``.
+    """
+    K, rows = _check_buf(x, block_rows)
+    payloads = tuple(payloads)
+    weights = tuple(float(w) for w in offset_weights)
+    if len(payloads) != len(weights):
+        raise ValueError("payloads and offset_weights must align")
+    for p in payloads:
+        if p.shape != x.shape:
+            raise ValueError(f"payload shape {p.shape} != x {x.shape}")
+    if not payloads:
+        return x
+
+    spec = pl.BlockSpec((1, block_rows, LANE), lambda k, i: (k, i, 0))
+    kernel = functools.partial(_mix_kernel, self_weight=float(self_weight),
+                               weights=weights)
+    return pl.pallas_call(
+        kernel,
+        grid=(K, rows // block_rows),
+        in_specs=[spec] * (1 + len(payloads)),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, *payloads)
 
 
 def _consensus_kernel(*refs, gamma: float, weights: Tuple[float, ...]):

@@ -52,6 +52,14 @@ def gossip_mix(x, offsets, offset_weights, self_weight, *,
                               interpret=_interpret(interpret), **kw)
 
 
+def payload_mix(x, payloads, offset_weights, self_weight, *,
+                block_rows: Optional[int] = None,
+                interpret: Optional[bool] = None):
+    kw = {} if block_rows is None else {"block_rows": block_rows}
+    return _gossip.payload_mix(x, payloads, offset_weights, self_weight,
+                               interpret=_interpret(interpret), **kw)
+
+
 def consensus_mix(x, hat_self, hat_nbrs, offset_weights, gamma, *,
                   block_rows: Optional[int] = None,
                   interpret: Optional[bool] = None):

@@ -60,7 +60,19 @@ def main() -> None:
     ap.add_argument("--compressor", default="sign")
     ap.add_argument("--gamma", type=float, default=0.4)
     ap.add_argument("--eta", type=float, default=1e-3)
-    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology", default="ring",
+                    help="static graph (ring/torus/full/...) or a "
+                         "time-varying schedule spec: "
+                         "'one-peer-exponential', 'randomized-rings:N'")
+    ap.add_argument("--staleness", type=int, default=None,
+                    help="straggler tolerance tau: gossip may consume "
+                         "payloads up to tau rounds old before blocking "
+                         "on a fresh exchange (0 = synchronous semantics "
+                         "with the buffers wired in)")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="simulated straggler probability per edge per "
+                         "round (requires --staleness >= 1)")
+    ap.add_argument("--straggler-seed", type=int, default=0)
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"],
                     help="optimizer execution backend (pallas = fused "
@@ -113,7 +125,10 @@ def main() -> None:
     opt = make_optimizer(args.optimizer, K=args.workers, eta=args.eta,
                          period=args.period, topology=args.topology,
                          gamma=args.gamma, compressor=args.compressor,
-                         backend=args.backend, comm=args.comm, mesh=mesh)
+                         backend=args.backend, comm=args.comm, mesh=mesh,
+                         staleness=args.staleness,
+                         straggler_rate=args.straggler_rate,
+                         straggler_seed=args.straggler_seed)
     # 2D mesh: thread the head-aware mode='axis' sharding rules into the
     # loss (grad pipeline packed-GSPMD path) so matmul operands stay
     # P(..., 'model') instead of replicating whole per-worker param sets

@@ -115,8 +115,18 @@ def greedy_generate(cfg: ModelConfig, params: PyTree, batch: PyTree,
     api = build_model(cfg)
     prompt = batch["tokens"]
     B = prompt.shape[0]
-    cache_len = cache_len or (prompt.shape[1] + n_new
-                              + (cfg.n_patches or 0))
+    if n_new < 0:
+        raise ValueError(f"n_new must be >= 0, got {n_new}")
+    if n_new == 0:
+        return jnp.zeros((B, 0), jnp.int32)
+    need = prompt.shape[1] + n_new + (cfg.n_patches or 0)
+    # `cache_len or need` would silently treat an explicit 0 as unset
+    if cache_len is None:
+        cache_len = need
+    elif cache_len < need:
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold prompt + {n_new} new "
+            f"tokens (need >= {need})")
     logits, cache = api.prefill(params, batch, cache_len=cache_len)
     tok = jnp.argmax(logits[:, -1, :] if logits.ndim == 3 else logits,
                      axis=-1).astype(jnp.int32)

@@ -79,10 +79,19 @@ class DecentralizedTrainer:
                  sharded_loss: Optional[Callable] = None,
                  plan: Any = None):
         self.loss_fn = loss_fn
+        self._microbatch = microbatch
+        self._sharded_loss = sharded_loss
+        self._plan = plan
+        self._build(opt)
+
+    def _build(self, opt: DecentralizedOptimizer) -> None:
+        """(Re)bind the trainer to an optimizer: rebuild the grad pipeline
+        and the jitted step. Called once at construction and again on each
+        elastic membership change (``resize``)."""
         self.opt = opt
         self.pipeline = make_grad_pipeline(
-            loss_fn, opt, microbatch=microbatch,
-            sharded_loss=sharded_loss, plan=plan)
+            self.loss_fn, opt, microbatch=self._microbatch,
+            sharded_loss=self._sharded_loss, plan=self._plan)
 
         def step(state, batch):
             losses, grads = self.pipeline.value_and_grad(state, batch)
@@ -93,6 +102,21 @@ class DecentralizedTrainer:
     def init(self, params: PyTree) -> Any:
         stacked = stack_params(params, self.opt.K)
         return self.opt.init(stacked)
+
+    def resize(self, state: Any, new_opt: DecentralizedOptimizer, *,
+               strategy: str = "clone") -> Any:
+        """Elastic membership change: carry ``state`` over to ``new_opt``
+        (built for the new K / topology) and rebind the trainer to it.
+
+        Exactly ONE recompile per membership change: the jitted step is
+        rebuilt here, and subsequent ``fit`` steps at the new K reuse its
+        cache. Params and Adam moments survive per ``strategy`` ("clone"
+        bootstraps joiners from live workers round-robin, "mean" from the
+        consensus mean); hats and straggler buffers restart cold."""
+        from repro.core.elastic import resize_state
+        new_state = resize_state(state, new_opt, strategy=strategy)
+        self._build(new_opt)
+        return new_state
 
     def _place_batch(self, batch: PyTree) -> PyTree:
         """comm='axis': ship each leaf's worker dim onto the worker mesh

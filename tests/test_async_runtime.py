@@ -1,0 +1,266 @@
+"""The straggler-tolerant time-varying-topology runtime.
+
+Parity pins (the acceptance bar for the async machinery):
+
+* a single-entry schedule is BITWISE the static topology it wraps, over a
+  10-step trainer run, for both D-Adam and CD-Adam and both backends;
+* tau=0 with the staleness buffers wired in is BITWISE the synchronous
+  step — the buffers must change nothing until a payload actually lags.
+
+Behavioral pins: consensus stays bounded (and keeps contracting) under
+tau-stale straggling edges; elastic join/leave carries params/moments
+and recompiles the trainer step exactly once per membership change;
+checkpoints strip transient comm state and restore it cold.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.core import dadam, make_optimizer
+from repro.train.loop import DecentralizedTrainer
+
+K = 8
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def init_params():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return {"w": jax.random.normal(k1, (6, 1)) * 0.3,
+            "b": jax.random.normal(k2, (1,)) * 0.1}
+
+
+def batches(K, seed=0):
+    key = jax.random.PRNGKey(seed)
+    while True:
+        key, k1 = jax.random.split(key)
+        x = jax.random.normal(k1, (K, 8, 6))
+        y = jnp.sum(x, axis=-1, keepdims=True)
+        yield {"x": x, "y": y}
+
+
+def params_equal(a, b):
+    flat_a = jax.tree_util.tree_leaves(a)
+    flat_b = jax.tree_util.tree_leaves(b)
+    return all(bool((x == y).all()) for x, y in zip(flat_a, flat_b))
+
+
+def fit_params(opt, steps=10, seed=0):
+    tr = DecentralizedTrainer(loss_fn, opt)
+    state = tr.init(init_params())
+    state, _ = tr.fit(state, batches(opt.K, seed), steps, log_every=steps)
+    return tr.opt.params_of(state)
+
+
+# ----------------------------- parity pins -----------------------------
+
+
+@pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_single_entry_schedule_is_bitwise_static(kind, backend):
+    """Wrapping a static graph in a one-entry schedule must not change a
+    single bit of a 10-step trainer run."""
+    from repro.core.schedule import static_schedule
+    from repro.core.topology import make_topology
+    topo = make_topology("ring", K)
+    kw = dict(eta=1e-2, period=2, backend=backend)
+    p_static = fit_params(make_optimizer(kind, K, topology=topo, **kw))
+    p_sched = fit_params(
+        make_optimizer(kind, K, topology=static_schedule(topo), **kw))
+    assert params_equal(p_static, p_sched)
+
+
+@pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("period", [1, 3])
+def test_tau_zero_is_bitwise_synchronous(kind, backend, period):
+    """staleness=0 wires in the double-buffered payload machinery but must
+    reproduce the synchronous step bit-for-bit (jit included)."""
+    kw = dict(eta=1e-2, period=period, backend=backend, topology="ring")
+    p_sync = fit_params(make_optimizer(kind, K, **kw))
+    p_tau0 = fit_params(make_optimizer(kind, K, staleness=0, **kw))
+    assert params_equal(p_sync, p_tau0)
+
+
+# --------------------------- staleness bounds ---------------------------
+
+
+@pytest.mark.parametrize("kind,backend,tol", [
+    ("d-adam", "reference", 1e-4), ("d-adam", "pallas", 1e-4),
+    ("cd-adam", "reference", 5e-1), ("cd-adam", "pallas", 5e-1)])
+def test_stale_gossip_consensus_contracts(kind, backend, tol):
+    """Pure gossip rounds (zero grad) with straggling edges at tau=2:
+    consensus error must contract by orders of magnitude, never diverge —
+    the bounded-staleness claim. CD-Adam contracts more slowly (sign
+    compression moves hats by gamma steps), hence the looser tolerance."""
+    opt = make_optimizer(kind, K, topology="ring", eta=1e-2, period=1,
+                         backend=backend, staleness=2, straggler_rate=0.4,
+                         straggler_seed=3)
+    p0 = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (K,) + x.shape).copy() +
+        jax.random.normal(jax.random.PRNGKey(1), (K,) + x.shape),
+        init_params())
+    state = opt.init(p0)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, p0)
+    e0 = float(dadam.consensus_error(opt.params_of(state)))
+    step = jax.jit(opt.step)
+    for _ in range(60):
+        state = step(state, zeros)
+    e1 = float(dadam.consensus_error(opt.params_of(state)))
+    assert np.isfinite(e1)
+    assert e1 < tol * max(e0, 1.0)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_stale_with_schedule_runs_and_contracts(backend):
+    opt = make_optimizer("d-adam", K, topology="one-peer-exponential",
+                         eta=1e-2, period=1, backend=backend,
+                         staleness=2, straggler_rate=0.3)
+    p0 = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(2),
+                                    (K,) + x.shape), init_params())
+    state = opt.init(p0)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, p0)
+    e0 = float(dadam.consensus_error(opt.params_of(state)))
+    step = jax.jit(opt.step)
+    for _ in range(40):
+        state = step(state, zeros)
+    e1 = float(dadam.consensus_error(opt.params_of(state)))
+    assert e1 < 1e-3 * max(e0, 1.0)
+
+
+def test_cdadam_staleness_rejects_axis_comm():
+    with pytest.raises(ValueError, match="ring buffers"):
+        make_optimizer("cd-adam", K, comm="axis", staleness=2,
+                       straggler_rate=0.1)
+
+
+@pytest.mark.skipif(jax.device_count() < K,
+                    reason="comm='axis' needs one device per worker "
+                           "(tier1.sh forces 8 host devices)")
+def test_dadam_axis_tau_zero_matches_stacked():
+    """tau=0 parity extends to the sharded comm='axis' execution."""
+    from repro.launch.mesh import make_worker_mesh
+    mesh = make_worker_mesh(K)
+    kw = dict(eta=1e-2, period=2, topology="ring")
+    p_stacked = fit_params(make_optimizer("d-adam", K, **kw))
+    opt_axis = make_optimizer("d-adam", K, comm="axis", mesh=mesh,
+                              staleness=0, **kw)
+    p_axis = fit_params(opt_axis)
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: jnp.allclose(a, b, atol=1e-6), p_stacked,
+        jax.device_get(p_axis)))
+
+
+# ------------------------------ elasticity ------------------------------
+
+
+@pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_elastic_resize_carries_state(kind, backend):
+    from repro.core import resize_state
+    kw = dict(topology="one-peer-exponential", eta=1e-2, period=1,
+              backend=backend, staleness=2, straggler_rate=0.3)
+    opt = make_optimizer(kind, K, **kw)
+    tr = DecentralizedTrainer(loss_fn, opt)
+    state = tr.init(init_params())
+    state, _ = tr.fit(state, batches(K), 5, log_every=5)
+    p_old = np.asarray(tr.opt.params_of(state)["w"])
+
+    grown = make_optimizer(kind, K + 4, **kw)
+    st2 = resize_state(state, grown, strategy="clone")
+    p_new = np.asarray(grown.params_of(st2)["w"])
+    assert (p_new[:K] == p_old).all()          # survivors untouched
+    assert (p_new[K:] == p_old[:4]).all()      # joiners cloned round-robin
+    assert int(jax.tree_util.tree_leaves(
+        st2.moments.count if hasattr(st2, "moments")
+        else st2.moments.count)[0]) == 5       # bias correction continues
+
+    st2m = resize_state(state, grown, strategy="mean")
+    pm = np.asarray(grown.params_of(st2m)["w"])
+    assert np.allclose(pm[K:], p_old.mean(0), atol=1e-6)
+
+    shrunk = make_optimizer(kind, K - 3, **kw)
+    st3 = resize_state(state, shrunk)
+    assert (np.asarray(shrunk.params_of(st3)["w"]) == p_old[:K - 3]).all()
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_trainer_resize_recompiles_exactly_once(backend):
+    """One recompile per membership change — the elastic-runtime cost
+    model. fit at the new K must then reuse the fresh cache."""
+    kw = dict(topology="one-peer-exponential", eta=1e-2,
+              backend=backend, staleness=2, straggler_rate=0.3)
+    tr = DecentralizedTrainer(loss_fn, make_optimizer("d-adam", K, **kw))
+    state = tr.init(init_params())
+    state, _ = tr.fit(state, batches(K), 4, log_every=4)
+    assert tr._step._cache_size() == 1
+
+    state = tr.resize(state, make_optimizer("d-adam", K + 2, **kw))
+    state, _ = tr.fit(state, batches(K + 2), 4, log_every=4)
+    assert tr._step._cache_size() == 1
+
+    state = tr.resize(state, make_optimizer("d-adam", K, **kw),
+                      strategy="mean")
+    state, log = tr.fit(state, batches(K), 4, log_every=4)
+    assert tr._step._cache_size() == 1
+    assert np.isfinite(log.loss[-1])
+
+
+# --------------------------- checkpoint + comm ---------------------------
+
+
+@pytest.mark.parametrize("kind", ["d-adam", "cd-adam"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_checkpoint_strips_transient_and_restores_cold(kind, backend):
+    """Transient straggler buffers never hit the wire format: the bytes
+    match a staleness-free run's layout, portable params round-trip
+    exactly, and the restored comm state is COLD."""
+    opt = make_optimizer(kind, K, topology="one-peer-exponential",
+                         eta=1e-2, period=1, backend=backend,
+                         staleness=2, straggler_rate=0.3)
+    state = opt.init(jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (K,) + x.shape).copy(),
+        init_params()))
+    g = jax.tree_util.tree_map(jnp.ones_like, opt.params_of(state))
+    for _ in range(4):
+        state = opt.step(state, g)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck.npz")
+        save(path, state, step=4)
+        rst, step = restore(path, opt.init(jax.tree_util.tree_map(
+            jnp.zeros_like, opt.params_of(state))))
+    assert step == 4
+    assert params_equal(opt.params_of(state), opt.params_of(rst))
+    if kind == "d-adam":
+        assert bool((rst.stale.age == dadam.COLD_AGE).all())
+        assert all(bool((b == 0).all())
+                   for b in jax.tree_util.tree_leaves(rst.stale.bufs))
+    else:
+        assert all(bool((r == 0).all())
+                   for r in jax.tree_util.tree_leaves(rst.pending))
+
+
+def test_checkpoint_without_staleness_restores_into_stale_like():
+    """A pre-async checkpoint (no transient fields on disk) restores into
+    a staleness-enabled like — forward compatibility of old checkpoints."""
+    plain = make_optimizer("d-adam", K, topology="ring", eta=1e-2)
+    stale = make_optimizer("d-adam", K, topology="ring", eta=1e-2,
+                           staleness=2, straggler_rate=0.2)
+    p0 = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (K,) + x.shape).copy(), init_params())
+    st = plain.init(p0)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck.npz")
+        save(path, st, step=0)
+        rst, _ = restore(path, stale.init(p0))
+    assert params_equal(plain.params_of(st), stale.params_of(rst))
+    assert bool((rst.stale.age == dadam.COLD_AGE).all())

@@ -96,6 +96,49 @@ def test_fused_step_smoke(tmp_path, capsys):
     assert json.loads(json_lines[0][5:])["benchmark"] == "fused_step"
 
 
+REQUIRED_HET_SCENARIOS = {"skew", "straggler", "schedule", "churn"}
+
+
+def test_heterogeneity_smoke(tmp_path, capsys):
+    """The heterogeneity benchmark (skew / straggler / schedule / churn)
+    must keep producing the record schema the CI summary scrapes."""
+    from benchmarks import heterogeneity
+
+    out = tmp_path / "het.json"
+    record = heterogeneity.main(steps=4, out=str(out))
+
+    assert record["benchmark"] == "heterogeneity"
+    assert record["jax_version"] == jax.__version__
+    assert record["workers"] == heterogeneity.K
+    assert record["steps"] == 4
+    scenarios = {r["scenario"] for r in record["records"]}
+    assert scenarios == REQUIRED_HET_SCENARIOS
+    for rec in record["records"]:
+        if rec["scenario"] == "churn":
+            assert rec["compiles_per_membership"] == 1
+            for key in ("loss_before", "loss_after", "consensus_after"):
+                assert isinstance(rec[key], float)
+        else:
+            assert isinstance(rec["loss"], float)
+            assert isinstance(rec["consensus"], float)
+            assert rec["consensus"] >= 0
+    assert {r["skew"] for r in record["records"]
+            if r["scenario"] == "skew"} == {0.0, 0.5, 0.9}
+    assert {r["topology"] for r in record["records"]
+            if r["scenario"] == "schedule"} == {
+                "ring", "one-peer-exponential"}
+    straggler = [r for r in record["records"]
+                 if r["scenario"] == "straggler"]
+    assert all(r["staleness"] >= 1 and 0 < r["straggler_rate"] < 1
+               for r in straggler)
+
+    assert json.loads(out.read_text()) == record
+    stdout = capsys.readouterr().out
+    json_lines = [ln for ln in stdout.splitlines() if ln.startswith("JSON ")]
+    assert len(json_lines) == 1
+    assert json.loads(json_lines[0][5:])["benchmark"] == "heterogeneity"
+
+
 def test_fused_step_axis_paths_execute_under_tier1():
     """tier1.sh forces 8 host devices, so both sharded paths must really
     run there — guard against the smoke silently degrading to

@@ -301,14 +301,16 @@ class TestCommBytesPerRound:
     def _params(self, K):
         return {"w": jnp.zeros((K, 10, 10)), "b": jnp.zeros((K, 3))}
 
-    def test_non_shift_topology_counts_weight_matrix_degree(self):
-        """Regression: torus(2x2) has no shift offsets => the old code
-        reported 0 bytes despite gossip_dense moving the full stack."""
+    def test_torus_offsets_agree_with_weight_matrix_degree(self):
+        """Regression (updated): torus(2x2) used to carry no shift offsets
+        and fell back to weight-matrix-degree accounting; its wrap-aware
+        GridShift offsets now drive both the roll lowering and the byte
+        accounting, and the two countings must agree."""
         opt = make_optimizer("d-adam", K=4, topology="torus")
         params = self._params(4)
         per_worker_bytes = 103 * 4
         deg = len(opt.topo.neighbors_of(0))
-        assert deg > 0 and not opt.topo.offsets
+        assert deg > 0 and len(opt.topo.offsets) == deg
         assert opt.comm_bytes_per_round(params) == deg * per_worker_bytes
 
     def test_dense_mixing_counts_weight_matrix_degree(self):

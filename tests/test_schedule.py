@@ -1,0 +1,110 @@
+"""Time-varying topology schedules: every entry must satisfy the same
+Definition-1 invariants a static graph does, the union machinery must
+align per-edge state across entries, and the named constructors must
+mix (one-peer-exponential reaches every peer within log2 K rounds)."""
+import numpy as np
+import pytest
+
+from repro.core.schedule import (TopologySchedule, comm_offsets,
+                                 make_schedule, one_peer_exponential,
+                                 randomized_rings, static_schedule)
+from repro.core.topology import make_topology, offset_perm, offsets_matrix, ring
+
+
+def _schedules(K):
+    out = [("one-peer-exp", one_peer_exponential(K)),
+           ("rand-rings", randomized_rings(K, n_entries=4, seed=0)),
+           ("static-ring", static_schedule(ring(K)))]
+    return out
+
+
+@pytest.mark.parametrize("K", [2, 3, 4, 8, 16, 32])
+def test_every_entry_doubly_stochastic_and_offsets_consistent(K):
+    """Each round's graph is a real Definition-1 mixing matrix AND its
+    shift lowering hits the advertised neighbors (offsets == weights) —
+    the schedule extension of the torus headline invariant."""
+    for name, sched in _schedules(K):
+        for topo in sched.entries:
+            W = topo.weights
+            assert np.allclose(W, W.T), name
+            assert np.allclose(W.sum(0), 1.0), name
+            assert np.all(W >= -1e-12), name
+            assert np.allclose(offsets_matrix(topo), W, atol=1e-12), name
+
+
+@pytest.mark.parametrize("K", [2, 4, 8, 16, 32])
+def test_one_peer_exponential_covers_all_peers(K):
+    """Within one cycle (log2 K rounds) every worker has exchanged with a
+    set of peers whose union graph is connected."""
+    sched = one_peer_exponential(K)
+    assert sched.n_entries == max(int(np.log2(K)), 1)
+    U = sum(t.weights for t in sched.entries) / sched.n_entries
+    # connected union: the second-largest |eigenvalue| of the mean mixing
+    # matrix is strictly below 1
+    assert sched.spectral_gap > 1e-3
+    assert np.allclose(U, sched.mean_weights)
+
+
+def test_at_is_cyclic():
+    sched = randomized_rings(8, n_entries=3, seed=1)
+    for r in range(9):
+        assert sched.at(r) is sched.entries[r % 3]
+
+
+@pytest.mark.parametrize("K", [4, 8, 16])
+def test_union_views_align_per_edge_state(K):
+    """union_views re-expresses every entry over the union offset tuple:
+    same offsets everywhere (so per-edge buffers line up), zero weight on
+    an entry's inactive edges, and an unchanged mixing matrix."""
+    sched = one_peer_exponential(K)
+    union = sched.union_offsets()
+    views = sched.union_views()
+    assert len(views) == sched.n_entries
+    for entry, view in zip(sched.entries, views):
+        assert view.offsets == union
+        assert np.allclose(view.weights, entry.weights)
+        active = {tuple(offset_perm(o, K)) for o in entry.offsets}
+        for o, w in zip(view.offsets, view.offset_weights):
+            if tuple(offset_perm(o, K)) not in active:
+                assert w == 0.0
+
+
+def test_comm_offsets_static_and_schedule():
+    topo = ring(8)
+    assert comm_offsets(topo) == tuple(topo.offsets)
+    sched = one_peer_exponential(8)
+    assert comm_offsets(sched) == sched.union_offsets()
+
+
+def test_make_schedule_parses_specs():
+    s = make_schedule("one-peer-exponential", 8)
+    assert isinstance(s, TopologySchedule)
+    s2 = make_schedule("randomized-rings:5", 8)
+    assert s2.n_entries == 5
+    s3 = make_schedule("one_peer_exp", 16)  # underscore + short alias
+    assert s3.n_entries == 4
+    with pytest.raises(KeyError):
+        make_schedule("no-such-schedule", 8)
+
+
+def test_single_entry_schedule_mirrors_its_topology():
+    topo = make_topology("torus", 16)
+    sched = static_schedule(topo)
+    assert sched.n_entries == 1
+    assert sched.at(7) is topo
+    assert sched.union_offsets() == tuple(topo.offsets)
+    assert np.allclose(sched.mean_weights, topo.weights)
+    assert abs(sched.spectral_gap - topo.spectral_gap) < 1e-12
+
+
+def test_randomized_rings_entries_differ_and_are_seeded():
+    a = randomized_rings(8, n_entries=4, seed=3)
+    b = randomized_rings(8, n_entries=4, seed=3)
+    c = randomized_rings(8, n_entries=4, seed=4)
+    for ta, tb in zip(a.entries, b.entries):
+        assert np.allclose(ta.weights, tb.weights)
+    assert any(not np.allclose(ta.weights, tc.weights)
+               for ta, tc in zip(a.entries, c.entries))
+    # at least two distinct ring orderings across the cycle
+    mats = [t.weights.tobytes() for t in a.entries]
+    assert len(set(mats)) >= 2

@@ -91,6 +91,46 @@ def test_greedy_generate():
     assert bool(jnp.all((out >= 0) & (out < cfg.vocab_size)))
 
 
+def test_greedy_generate_n_new_zero_returns_empty():
+    """n_new=0 must return an empty (B, 0) int32 batch — it used to fall
+    through prefill and hand back one unrequested token."""
+    cfg = get_reduced("llama3.2-1b").model
+    api = build_model(cfg)
+    params = api.init(KEY)
+    out = greedy_generate(cfg, params, make_prompt(cfg), n_new=0)
+    assert out.shape == (2, 0)
+    assert out.dtype == jnp.int32
+
+
+def test_greedy_generate_rejects_negative_n_new():
+    cfg = get_reduced("llama3.2-1b").model
+    with pytest.raises(ValueError, match="n_new"):
+        greedy_generate(cfg, None, make_prompt(cfg), n_new=-1)
+
+
+def test_greedy_generate_rejects_undersized_cache():
+    """An explicit cache_len too small to hold prompt + n_new must raise
+    up front instead of silently clobbering KV slots mid-decode. An
+    explicit 0 used to be treated as *unset* by the `or` default."""
+    cfg = get_reduced("llama3.2-1b").model
+    with pytest.raises(ValueError, match="cache_len"):
+        greedy_generate(cfg, None, make_prompt(cfg), n_new=4, cache_len=0)
+    with pytest.raises(ValueError, match="cache_len"):
+        greedy_generate(cfg, None, make_prompt(cfg), n_new=4, cache_len=13)
+
+
+@pytest.mark.slow
+def test_greedy_generate_explicit_cache_len_matches_default():
+    cfg = get_reduced("llama3.2-1b").model
+    api = build_model(cfg)
+    params = api.init(KEY)
+    prompt = make_prompt(cfg)
+    o1 = greedy_generate(cfg, params, prompt, n_new=3)
+    o2 = greedy_generate(cfg, params, prompt, n_new=3,
+                         cache_len=prompt["tokens"].shape[1] + 3)
+    assert bool(jnp.all(o1 == o2))
+
+
 @pytest.mark.slow
 def test_greedy_generate_deterministic():
     cfg = get_reduced("yi-6b").model

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.topology import (exponential, fully_connected,
-                                 make_topology, ring)
+                                 make_topology, offsets_matrix, ring)
 
 
 @pytest.mark.parametrize("name", ["ring", "fully_connected", "exponential",
@@ -49,6 +49,42 @@ def test_ring_offsets_reconstruct_matrix(K):
         for s, w in zip(topo.offsets, topo.offset_weights):
             W[k, (k + s) % K] += w
     assert np.allclose(W, topo.weights)
+
+
+@pytest.mark.parametrize("name", ["ring", "fully_connected", "exponential",
+                                  "torus"])
+@pytest.mark.parametrize("K", [1, 2, 3, 4, 6, 8, 9, 12, 16, 25, 32])
+def test_offsets_reconstruct_weights_zoo_wide(name, K):
+    """THE invariant the wrong-neighbor torus lowering violated: the
+    mixing matrix the shift lowering applies (self_weight on the diagonal
+    + w at each offset's source permutation) must equal ``topo.weights``
+    exactly — otherwise roll/ppermute gossip mixes with the wrong
+    neighbors while the spectral-gap reporting describes the intended
+    graph. Property-checked over the whole topology zoo, including the
+    non-square and degenerate-extent torus factorizations."""
+    topo = make_topology(name, K)
+    assert np.allclose(offsets_matrix(topo), topo.weights, atol=1e-12)
+
+
+@pytest.mark.parametrize("K", [2, 3, 5, 7, 11, 13, 31])
+def test_torus_prime_K_falls_back_to_ring(K):
+    """A prime K only factors as 1 x K, whose torus degenerates to a
+    worse-conditioned self-loop-heavy ring; make_topology must refuse the
+    degenerate lowering, warn, and hand back the honest ring."""
+    with pytest.warns(RuntimeWarning, match="falling back to ring"):
+        topo = make_topology("torus", K)
+    expected = ring(K)
+    assert topo.name == expected.name
+    assert np.allclose(topo.weights, expected.weights)
+    assert np.allclose(offsets_matrix(topo), topo.weights)
+
+
+def test_torus_composite_K_does_not_warn():
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        topo = make_topology("torus", 12)
+    assert topo.name.startswith("torus")
 
 
 def test_gossip_contraction_property():
