@@ -70,3 +70,34 @@ def train_ctr(kind: str, steps: int, *, log_every: int = 10, **kw
     scores = deepfm_logits(avg, flat["feat_ids"])
     test_auc = auc(np.asarray(scores), np.asarray(flat["label"]))
     return {"log": log, "auc": test_auc}, us
+
+
+# ------------------------- record-schema pinning -----------------------------
+
+
+def schema_of(obj):
+    """Nested type schema of a benchmark record (for trajectory pinning).
+
+    Dicts keep their keys, lists collapse to the deduped element schemas
+    (so a longer run does not change the schema), scalars reduce to a type
+    tag. Two records produced by the same code at different sizes/steps
+    compare equal; a renamed/dropped/retyped field does not — that drift is
+    what the bench-smoke CI job diffs against the committed BENCH_<pr>.json.
+    """
+    if isinstance(obj, dict):
+        return {k: schema_of(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        uniq: list = []
+        for s in (schema_of(v) for v in obj):
+            if s not in uniq:
+                uniq.append(s)
+        return uniq
+    if isinstance(obj, bool):
+        return "bool"
+    if isinstance(obj, int):
+        return "int"
+    if isinstance(obj, float):
+        return "float"
+    if obj is None:
+        return "none"
+    return type(obj).__name__

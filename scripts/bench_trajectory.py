@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Generate the committed per-PR bench trajectory file ``BENCH_<n>.json``.
+
+One file per PR, committed at the repo root, holding the fused-step and
+heterogeneity records at the same smoke sizes the bench-smoke CI job runs
+(workers=4, size=8192, model_parallel=2; heterogeneity steps=60). The CI
+job diffs the *schema* of its freshly produced records against the newest
+committed file (``benchmarks.common.schema_of``), so a field rename/drop/
+retype fails the push even though absolute CPU timings drift run to run.
+
+    PYTHONPATH=src:. python scripts/bench_trajectory.py --pr 7
+"""
+import argparse
+import json
+import os
+import sys
+
+# fused_step's axis2d path needs workers x model_parallel devices; force
+# them BEFORE jax initializes (same convention as scripts/tier1.sh)
+_DEVICES = os.environ.get("REPRO_HOST_DEVICES", "8")
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={_DEVICES}")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pr", type=int, required=True,
+                    help="PR number; writes BENCH_<pr>.json at the repo root")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--size", type=int, default=8192)
+    ap.add_argument("--model-parallel", type=int, default=2)
+    ap.add_argument("--het-steps", type=int, default=60)
+    ns = ap.parse_args(argv)
+
+    import jax
+    from benchmarks import fused_step, heterogeneity
+
+    record = {
+        "pr": ns.pr,
+        "jax_version": jax.__version__,
+        "fused_step": fused_step.main(
+            workers=ns.workers, size=ns.size,
+            model_parallel=ns.model_parallel),
+        "heterogeneity": heterogeneity.main(steps=ns.het_steps),
+    }
+    out = os.path.abspath(os.path.join(_ROOT, f"BENCH_{ns.pr}.json"))
+    with open(out, "w") as fh:
+        json.dump(record, fh, indent=1)
+        fh.write("\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""CI gate: the three-pass shard-safety analyzer over the shipped configs.
+
+Sweeps reference/packed/axis/axis2d x D-Adam/CD-Adam x plain/schedule/
+staleness, evaluates each compiled step against its derived InvariantSpec,
+lints the jaxprs, checks the topology zoo, and runs the known-bug corpus
+(which must FAIL with the expected rule IDs). Exit code 0 iff everything
+holds.
+
+    PYTHONPATH=src python scripts/check_invariants.py [--backends ...]
+        [--kinds ...] [--variants ...] [--no-corpus] [--verbose]
+        [--summary FILE]
+"""
+import argparse
+import os
+import sys
+
+# the axis2d configs need K x M = 8 devices; force host devices BEFORE jax
+# imports (same convention as scripts/tier1.sh and launch/dryrun.py)
+_DEVICES = os.environ.get("REPRO_HOST_DEVICES", "8")
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={_DEVICES}")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import check as check_mod  # noqa: E402
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--backends", nargs="+", default=list(check_mod.BACKENDS),
+                   choices=list(check_mod.BACKENDS))
+    p.add_argument("--kinds", nargs="+", default=list(check_mod.KINDS),
+                   choices=list(check_mod.KINDS))
+    p.add_argument("--variants", nargs="+", default=list(check_mod.VARIANTS),
+                   choices=list(check_mod.VARIANTS))
+    p.add_argument("--no-corpus", action="store_true",
+                   help="skip the known-bug corpus (it must normally FAIL "
+                        "with the expected rule IDs)")
+    p.add_argument("--verbose", action="store_true",
+                   help="print full per-config invariant reports")
+    p.add_argument("--summary", default="",
+                   help="also append the log to this file (e.g. "
+                        "$GITHUB_STEP_SUMMARY)")
+    ns = p.parse_args(argv)
+
+    lines = []
+
+    def log(msg: str) -> None:
+        print(msg)
+        lines.append(msg)
+
+    ok = check_mod.run(ns.backends, ns.kinds, ns.variants,
+                       corpus=not ns.no_corpus, verbose=ns.verbose, log=log)
+    if ns.summary:
+        with open(ns.summary, "a") as fh:
+            fh.write("```\n" + "\n".join(lines) + "\n```\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

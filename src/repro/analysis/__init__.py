@@ -1,5 +1,22 @@
-from repro.analysis.hlo import collective_bytes, collective_counts
+from repro.analysis.astlint import lint_paths, lint_source
+from repro.analysis.hlo import (collective_bytes, collective_counts,
+                                collective_summary)
+from repro.analysis.invariants import (InvariantReport, InvariantSpec,
+                                       InvariantViolation, assert_invariants,
+                                       assert_topology, check_topology,
+                                       evaluate_hlo)
+from repro.analysis.jaxpr_lint import (RecompileWatch, lint_fn,
+                                       lint_grad_psums, lint_jaxpr)
 from repro.analysis.roofline import Roofline, from_artifact, model_flops_for
 
-__all__ = ["collective_bytes", "collective_counts", "Roofline",
-           "from_artifact", "model_flops_for"]
+# repro.analysis.check (the config-sweep orchestrator) is deliberately NOT
+# imported here: it pulls in the train/launch layers, which import this
+# package — use `from repro.analysis import check` directly.
+
+__all__ = ["collective_bytes", "collective_counts", "collective_summary",
+           "Roofline", "from_artifact", "model_flops_for",
+           "InvariantSpec", "InvariantReport", "InvariantViolation",
+           "assert_invariants", "assert_topology", "check_topology",
+           "evaluate_hlo",
+           "lint_jaxpr", "lint_fn", "lint_grad_psums", "RecompileWatch",
+           "lint_source", "lint_paths"]

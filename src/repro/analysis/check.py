@@ -1,0 +1,390 @@
+"""``repro.analysis.check`` — the three-pass shard-safety analyzer.
+
+One entry point (:func:`run`) sweeps the shipped execution configs
+(reference / packed / axis / axis2d × D-Adam / CD-Adam × plain / schedule
+/ staleness variants) and, per config:
+
+1. **jaxpr lint** — wrong-axis collectives on the full compiled step
+   (JXL002), raw-collective rules (JXL001, forward + backward psum
+   accounting) on the sharded-loss probe where one exists;
+2. **HLO invariant gates** — an :class:`~.invariants.InvariantSpec`
+   derived from the config (zero all-gathers everywhere, permute byte
+   budgets from ``comm_bytes_per_round``-style block accounting, small
+   activation all-reduces, bounded trips, no unknown dtypes) evaluated on
+   the compiled step;
+3. **topology invariants** — INV006/INV007 over the zoo + the schedule
+   entries the sweep uses.
+
+plus a **known-bug corpus** (:func:`run_corpus`) that must FAIL with the
+expected rule IDs — a deliberately raw-psum sharded loss (PR-5 bug class,
+JXL001 + RPR001) and a circulant-where-GridShift-needed torus mixing
+matrix (PR-6 bug class, INV006). The corpus failing to fail fails the
+gate: an analyzer that can't see the bugs it was built for is broken.
+
+Used by ``scripts/check_invariants.py`` (the CI gate) and importable from
+tests. Requires enough host devices for the axis configs (the script
+forces 8 via XLA_FLAGS before importing jax).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import astlint
+from repro.analysis.invariants import (InvariantReport, InvariantSpec,
+                                       check_topology, evaluate_hlo)
+from repro.analysis.jaxpr_lint import Finding, lint_fn, lint_grad_psums
+
+# ------------------------- the sweep model/loss ------------------------------
+
+# sized so the weight leaf spans both model shards at M=2 (rows_total ==
+# d_in through the packed tile quantum; see row_parallel_dot)
+DIN, DOUT, B = 512, 64, 8
+_KEY = jax.random.PRNGKey(7)
+
+
+def _params():
+    return {"bias": jnp.zeros((DOUT,)),
+            "w": jax.random.normal(_KEY, (DIN, DOUT)) * 0.02}
+
+
+def _loss(p, batch):
+    pred = batch["x"] @ p["w"] + p["bias"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def _sharded_loss(chunks, batch, ctx):
+    from repro.train.grad import row_parallel_dot
+
+    h = row_parallel_dot(batch["x"], chunks["w"], DOUT, ctx)
+    pred = h + ctx.full_leaf(chunks["bias"], 0)
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def _batch(K):
+    return {"x": jax.random.normal(_KEY, (K, B, DIN)),
+            "y": jax.random.normal(jax.random.fold_in(_KEY, 1),
+                                   (K, B, DOUT))}
+
+
+# ------------------------------ sweep configs --------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    backend: str            # 'reference' | 'packed' | 'axis' | 'axis2d'
+    kind: str               # 'd-adam' | 'cd-adam'
+    variant: str            # 'plain' | 'schedule' | 'stale'
+    K: int = 4
+    M: int = 1
+
+    @property
+    def name(self) -> str:
+        return f"{self.backend}/{self.kind}/{self.variant}"
+
+    @property
+    def devices_needed(self) -> int:
+        if self.backend == "axis2d":
+            return self.K * self.M
+        if self.backend == "axis":
+            return self.K
+        return 1
+
+
+BACKENDS = ("reference", "packed", "axis", "axis2d")
+KINDS = ("d-adam", "cd-adam")
+VARIANTS = ("plain", "schedule", "stale")
+
+
+def sweep_configs(backends: Sequence[str] = BACKENDS,
+                  kinds: Sequence[str] = KINDS,
+                  variants: Sequence[str] = VARIANTS) -> List[SweepConfig]:
+    out = []
+    for b in backends:
+        for k in kinds:
+            for v in variants:
+                # config validation rejects these combinations: staleness
+                # buffers are per-worker payload copies (no row-sharding,
+                # so no model_parallel), and CD-Adam's per-edge delay
+                # rings have no per-shard addressing under comm='axis'
+                if v == "stale" and (b == "axis2d"
+                                     or (k == "cd-adam" and b == "axis")):
+                    continue
+                out.append(SweepConfig(b, k, v,
+                                       M=2 if b == "axis2d" else 1))
+    return out
+
+
+def _build(cfg: SweepConfig):
+    """(trainer, opt, state, placed batch) for one sweep config."""
+    from repro.core import make_optimizer
+    from repro.train import DecentralizedTrainer
+
+    kw: Dict[str, Any] = dict(eta=1e-2, period=2)
+    if cfg.variant == "schedule":
+        kw["topology"] = "one-peer-exp"
+    if cfg.variant == "stale":
+        kw.update(staleness=1, straggler_rate=0.25)
+    extra: Dict[str, Any] = {}
+    if cfg.backend in ("packed", "axis", "axis2d"):
+        kw["backend"] = "pallas"
+    if cfg.backend in ("axis", "axis2d"):
+        from repro.launch.mesh import make_worker_mesh
+
+        kw.update(comm="axis",
+                  mesh=make_worker_mesh(cfg.K, model_parallel=cfg.M))
+    if cfg.backend == "axis2d":
+        extra["sharded_loss"] = _sharded_loss
+    opt = make_optimizer(cfg.kind, K=cfg.K, **kw)
+    tr = DecentralizedTrainer(_loss, opt, **extra)
+    state = tr.init(_params())
+    batch = tr._place_batch(_batch(cfg.K))
+    return tr, opt, state, batch
+
+
+def spec_for(cfg: SweepConfig, state: Any) -> InvariantSpec:
+    """The invariant spec a config's compiled step must satisfy. Budgets
+    are per-device operand bytes (partitioned HLO): a gossip permute moves
+    at most one device's row-shard block; activation all-reduces stay
+    orders of magnitude under parameter size."""
+    if cfg.backend in ("reference", "packed"):
+        # stacked execution: everything is one device's program
+        return InvariantSpec(
+            name=cfg.name,
+            collective_counts={k: 0 for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute")},
+            max_trip_count=1024)
+    block_bytes = int(state.buf.nbytes) // (cfg.K * cfg.M)
+    # gossip degree x payload per hop, x2 for staleness double-buffering
+    # and per-edge age/metadata, x4 slack for GSPMD scheduling copies
+    permute_budget = 8 * 4 * block_bytes
+    return InvariantSpec(
+        name=cfg.name,
+        collective_counts={"all-gather": 0, "all-to-all": 0,
+                           "reduce-scatter": 0},
+        min_collective_counts={"collective-permute": 1},
+        collective_bytes={"collective-permute": permute_budget},
+        single_collective_bytes={"all-gather": 0,
+                                 "collective-permute": block_bytes,
+                                 "all-reduce": max(4 * B * DOUT, 4096)},
+        max_trip_count=1024)
+
+
+@dataclasses.dataclass
+class ConfigResult:
+    config: str
+    report: Optional[InvariantReport] = None
+    lint: List[Finding] = dataclasses.field(default_factory=list)
+    skipped: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return (self.skipped is not None
+                or ((self.report is None or self.report.ok)
+                    and not self.lint))
+
+
+def check_config(cfg: SweepConfig) -> ConfigResult:
+    if jax.device_count() < cfg.devices_needed:
+        return ConfigResult(cfg.name,
+                            skipped=f"needs {cfg.devices_needed} devices, "
+                                    f"have {jax.device_count()}")
+    tr, opt, state, batch = _build(cfg)
+    res = ConfigResult(cfg.name)
+
+    # pass 1: jaxpr lint. Wrong-axis rules on the full step (raw-psum
+    # rules stay off: non-AD optimizer code psums compression scales
+    # legitimately); raw-collective rules on the sharded-loss probe.
+    step = tr.pipeline.value_and_grad
+    res.lint += lint_fn(lambda s, b: step(s, b), state, batch,
+                        check_raw=False,
+                        gossip_axes=(opt.cfg.axis_name,),
+                        reduce_axes=(getattr(opt.cfg, "model_axis_name",
+                                             "model"),))
+    if cfg.backend == "axis2d":
+        from repro.train.grad import sharded_loss_probe
+
+        probe = sharded_loss_probe(_sharded_loss, opt)
+        res.lint += lint_fn(probe, state, batch)
+        res.lint += lint_grad_psums(probe, step, (state, batch))
+
+    # pass 2: HLO invariants on the compiled step
+    hlo = tr._step.lower(state, batch).compile().as_text()
+    res.report = evaluate_hlo(hlo, spec_for(cfg, state))
+    return res
+
+
+# --------------------------- topology sweep ----------------------------------
+
+
+def topology_reports() -> List[InvariantReport]:
+    """INV006/INV007 across the zoo + the sweep's schedule entries."""
+    from repro.core.schedule import make_schedule
+    from repro.core.topology import make_topology
+
+    reports = []
+    for name, K in [("ring", 4), ("ring", 5), ("ring", 8),
+                    ("exponential", 8), ("fully_connected", 6),
+                    ("torus", 8), ("torus", 9)]:
+        reports.append(check_topology(make_topology(name, K)))
+    for entry in make_schedule("one-peer-exp", 8).entries:
+        reports.append(check_topology(entry))
+    return reports
+
+
+# ---------------------------- known-bug corpus -------------------------------
+
+
+def _raw_psum_loss(chunks, batch, ctx):
+    """PR-5 bug class, reconstructed: ties shards with a raw psum whose
+    transpose replicates the cotangent (grads silently scaled by M)."""
+    from repro.train.grad import row_parallel_dot
+
+    h = row_parallel_dot(batch["x"], chunks["w"], DOUT, ctx)
+    pred = h + ctx.full_leaf(chunks["bias"], 0)
+    mse = jnp.mean((pred - batch["y"]) ** 2)
+    return jax.lax.psum(mse, ctx.axis_name) / ctx.n_shards  # noqa: RPR001
+
+
+def corpus_raw_psum() -> List[Finding]:
+    """The raw-psum loss through the real pipeline: both JXL001 detection
+    modes must fire (forward custom_vjp-boundary walk AND backward psum
+    shape accounting)."""
+    from repro.core import make_optimizer
+    from repro.launch.mesh import make_worker_mesh
+    from repro.train import DecentralizedTrainer
+    from repro.train.grad import sharded_loss_probe
+
+    K, M = 4, 2
+    mesh = make_worker_mesh(K, model_parallel=M)
+    opt = make_optimizer("d-adam", K=K, eta=1e-2, period=2,
+                         backend="pallas", comm="axis", mesh=mesh)
+    tr = DecentralizedTrainer(_loss, opt, sharded_loss=_raw_psum_loss)
+    state = tr.init(_params())
+    batch = tr._place_batch(_batch(K))
+    probe = sharded_loss_probe(_raw_psum_loss, opt)
+    fwd = lint_fn(probe, state, batch)
+    bwd = lint_grad_psums(probe, tr.pipeline.value_and_grad, (state, batch))
+    return fwd + bwd
+
+
+def corpus_bad_torus() -> InvariantReport:
+    """PR-6 bug class, reconstructed: torus weights with FLAT circulant
+    offsets — ±1 wraps across row boundaries, mixing wrong neighbors; the
+    typed GridShift offsets are the fix. INV006 must fail."""
+    from repro.core.topology import make_topology
+
+    torus = make_topology("torus", 8)  # 2 x 4 grid
+    bad = dataclasses.replace(torus, name="bad-flat-torus",
+                              offsets=(1, -1, 4, -4))
+    return check_topology(bad)
+
+
+_CORPUS_SRC = '''
+import jax
+import numpy as np
+from jax.experimental import pallas as pl
+
+def bad_sharded_loss(chunks, batch, ctx):
+    return jax.lax.psum(chunks[0].sum(), ctx.axis_name)
+
+@jax.jit
+def step(state, batch):
+    return np.asarray(state), state.loss.item()
+
+def kernel(x):
+    return pl.pallas_call(lambda r, o: None, out_shape=x)(x)
+
+def spec(K):
+    return pl.BlockSpec((1, 8, 128), lambda k, i: (k / 2, i, 0))
+'''
+
+
+def corpus_ast() -> List[astlint.AstFinding]:
+    return astlint.lint_source(_CORPUS_SRC, "<corpus>")
+
+
+def run_corpus() -> Tuple[bool, List[str]]:
+    """Every corpus case must trip its expected rule. Returns (ok, log)."""
+    lines: List[str] = []
+    ok = True
+
+    def expect(label: str, rules_found: Sequence[str],
+               required: Sequence[str]) -> None:
+        nonlocal ok
+        missing = [r for r in required if r not in rules_found]
+        good = not missing
+        ok = ok and good
+        mark = "ok  " if good else "FAIL"
+        lines.append(f"[{mark}] corpus {label}: expected {list(required)}, "
+                     f"found {sorted(set(rules_found))}")
+
+    if jax.device_count() >= 8:
+        expect("raw-psum sharded loss (PR-5 class)",
+               [f.rule for f in corpus_raw_psum()], ["JXL001"])
+    else:
+        lines.append("[skip] corpus raw-psum: needs 8 devices")
+    report = corpus_bad_torus()
+    expect("flat-circulant torus (PR-6 class)", report.failed_rules(),
+           ["INV006"])
+    expect("AST rules", [f.rule for f in corpus_ast()],
+           ["RPR001", "RPR002", "RPR003", "RPR004"])
+    return ok, lines
+
+
+# --------------------------------- driver ------------------------------------
+
+
+def run(backends: Sequence[str] = BACKENDS,
+        kinds: Sequence[str] = KINDS,
+        variants: Sequence[str] = VARIANTS,
+        *, corpus: bool = True, verbose: bool = False,
+        log: Callable[[str], None] = print) -> bool:
+    """The CI gate: sweep + topology zoo + known-bug corpus. Returns
+    overall pass/fail; prints per-config reports and per-rule counts."""
+    ok = True
+    rule_counts: Dict[str, int] = {}
+
+    for cfg in sweep_configs(backends, kinds, variants):
+        res = check_config(cfg)
+        if res.skipped:
+            log(f"[skip] {res.config}: {res.skipped}")
+            continue
+        ok = ok and res.ok
+        mark = "ok  " if res.ok else "FAIL"
+        log(f"[{mark}] {res.config}")
+        for f in res.lint:
+            rule_counts[f.rule] = rule_counts.get(f.rule, 0) + 1
+            log(f"       {f}")
+        if res.report is not None:
+            for c in res.report.failures:
+                rule_counts[c.rule] = rule_counts.get(c.rule, 0) + 1
+            if verbose or not res.report.ok:
+                for line in res.report.format(
+                        verbose=verbose).splitlines()[1:]:
+                    log(f"     {line}")
+
+    for report in topology_reports():
+        if not report.ok:
+            ok = False
+            for c in report.failures:
+                rule_counts[c.rule] = rule_counts.get(c.rule, 0) + 1
+            log(report.format(verbose=False))
+    log("[ok  ] topology zoo + schedule entries (INV006/INV007)"
+        if ok else "[    ] topology zoo checked")
+
+    if corpus:
+        corpus_ok, lines = run_corpus()
+        ok = ok and corpus_ok
+        for line in lines:
+            log(line)
+
+    if rule_counts:
+        log("per-rule findings: " + ", ".join(
+            f"{r}={n}" for r, n in sorted(rule_counts.items())))
+    log("check_invariants: " + ("PASS" if ok else "FAIL"))
+    return ok

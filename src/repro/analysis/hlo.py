@@ -23,19 +23,37 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
     "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e8m0fnu": 1, "f4e2m1fn": 1,
+    # shape-only placeholders that carry no data bytes
+    "token": 0, "opaque": 0,
 }
+
+# A dtype the table does not know is counted at this width and WARNED about
+# (once per dtype per process) instead of being silently dropped — an
+# invariant gate built on byte accounting that quietly zeroes unknown
+# dtypes is a false pass. ``HloCost.unknown_dtypes`` carries the per-dtype
+# element counts so spec gates can fail hard on them.
+_UNKNOWN_DTYPE_BYTES = 4
+_WARNED_DTYPES: set = set()
 
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
                     "all-to-all", "collective-permute")
 
-_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# dtype tokens follow the XLA grammar (pred/token/opaque/bf16/cNN plus
+# [fsu]<digits><suffix> families); matching any lowercase word would pick
+# up identifiers like `bufs[1]` out of op metadata and miscount them as
+# unknown-dtype shapes
+_SHAPE_RE = re.compile(
+    r"\b(pred|token|opaque|bf16|c64|c128|[fsu][0-9][a-z0-9]*)\[([0-9,]*)\]")
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
@@ -54,17 +72,34 @@ _ELEMENTWISE = {
 }
 
 
+def _warn_unknown_dtype(dtype: str) -> None:
+    if dtype in _WARNED_DTYPES:
+        return
+    _WARNED_DTYPES.add(dtype)
+    warnings.warn(
+        f"HLO dtype {dtype!r} missing from analysis table; counting "
+        f"{_UNKNOWN_DTYPE_BYTES} bytes/element. Extend "
+        "repro.analysis.hlo._DTYPE_BYTES to make byte budgets exact.",
+        RuntimeWarning, stacklevel=3)
+
+
+def _elem_count(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
 def _shape_list_bytes(text: str) -> int:
     return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(text))
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
+    n = _elem_count(dims)
     if dtype not in _DTYPE_BYTES:
-        return 0
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
+        _warn_unknown_dtype(dtype)
+        return n * _UNKNOWN_DTYPE_BYTES
     return n * _DTYPE_BYTES[dtype]
 
 
@@ -72,13 +107,21 @@ def _shape_elems(text: str) -> int:
     total = 0
     for dtype, dims in _SHAPE_RE.findall(text):
         if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n
+            _warn_unknown_dtype(dtype)
+        total += _elem_count(dims)
     return total
+
+
+def unknown_dtypes_in(text: str) -> Dict[str, int]:
+    """dtype -> total element count for every HLO shape whose dtype the
+    byte table does not know. Non-empty means every byte figure derived
+    from this HLO is an estimate, not an account — spec gates fail on it
+    unless explicitly allowed."""
+    out: Dict[str, int] = {}
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            out[dtype] = out.get(dtype, 0) + _elem_count(dims)
+    return out
 
 
 @dataclasses.dataclass
@@ -214,6 +257,10 @@ class HloCost:
     coll_max: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
     unknown_trip_counts: int = 0
+    # largest single resolved while-loop trip count (not nested-multiplied)
+    max_trip_count: int = 0
+    # dtype -> element count for shapes the byte table can't account
+    unknown_dtypes: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def total_coll(self) -> float:
         return sum(self.coll.values())
@@ -275,6 +322,8 @@ def analyze(text: str) -> HloCost:
                 if trip is None:
                     trip = 1
                     cost.unknown_trip_counts += 1
+                else:
+                    cost.max_trip_count = max(cost.max_trip_count, trip)
                 if b:
                     visit(b.group(1), mult * trip)
                 continue
@@ -350,6 +399,7 @@ def analyze(text: str) -> HloCost:
                 cost.flops += mult * _shape_elems(ins.result_type)
 
     visit(entry, 1.0)
+    cost.unknown_dtypes = unknown_dtypes_in(text)
     return cost
 
 
@@ -383,7 +433,9 @@ def collective_summary(hlo_text: str) -> Dict[str, Dict[str, int]]:
 def full_cost(hlo_text: str) -> Dict[str, float]:
     c = analyze(hlo_text)
     d = {"flops": c.flops, "bytes": c.bytes,
-         "unknown_trip_counts": c.unknown_trip_counts}
+         "unknown_trip_counts": c.unknown_trip_counts,
+         "max_trip_count": c.max_trip_count,
+         "unknown_dtype_elems": sum(c.unknown_dtypes.values())}
     d.update({f"coll_{k}": v for k, v in c.coll.items()})
     d["coll_total"] = c.total_coll()
     return d

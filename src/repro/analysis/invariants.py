@@ -1,0 +1,225 @@
+"""Declarative HLO + topology invariant gates (rule namespace ``INV``).
+
+The scattered per-test assertions over ``collective_summary`` output
+("the 2D step has zero all-gathers", "a permute moves at most one block")
+become one declarative object:
+
+    spec = InvariantSpec(
+        name="sharded-2d-step",
+        collective_counts={"all-gather": 0, "all-to-all": 0},
+        min_collective_counts={"collective-permute": 1},
+        collective_bytes={"collective-permute": budget},
+        single_collective_bytes={"all-reduce": 4 * batch},
+        max_trip_count=64,
+    )
+    assert_invariants(step, (state, batch), spec)
+
+evaluated against the compiled (partitioned) HLO through the existing
+trip-count-aware parser. Byte figures are per-device operand bytes with
+while-loop multipliers (``bytes``) or per single instruction
+(``single_collective_bytes`` / ``max_bytes``).
+
+Rules:
+
+=======  ====================================================
+INV001   per-kind collective count bound (max and min)
+INV002   per-kind collective byte budget ("*" = total)
+INV003   max single-collective operand bytes
+INV004   while-loop trip counts bounded / resolvable
+INV005   no unknown dtypes in the byte accounting
+INV006   mixing-matrix lowering: offsets_matrix(topo) == weights
+INV007   mixing weights doubly stochastic
+=======  ====================================================
+
+INV006 pins the PR-6 bug class: a flat circulant offset list on a torus
+mixes wrong neighbors at row boundaries; the typed ``GridShift`` offsets
+must reproduce the dense weights exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.analysis import hlo as hlo_mod
+
+RULES = {
+    "INV001": "collective count out of bounds",
+    "INV002": "collective byte budget exceeded",
+    "INV003": "single collective larger than bound",
+    "INV004": "while-loop trip count unbounded or unresolved",
+    "INV005": "unknown dtype in byte accounting",
+    "INV006": "mixing-matrix lowering mismatch (offsets vs weights)",
+    "INV007": "mixing weights not doubly stochastic",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class InvariantSpec:
+    """Bounds evaluated against one compiled program's HLO.
+
+    Absent keys are unchecked; kinds are the five of
+    ``hlo.COLLECTIVE_KINDS``; ``"*"`` in ``collective_bytes`` bounds the
+    total across kinds.
+    """
+    name: str = "step"
+    collective_counts: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
+    min_collective_counts: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
+    collective_bytes: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
+    single_collective_bytes: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
+    max_trip_count: Optional[int] = None
+    allow_unknown_trip_counts: bool = True
+    allow_unknown_dtypes: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    rule: str
+    desc: str
+    observed: Any
+    bound: Any
+    ok: bool
+
+    def __str__(self) -> str:
+        mark = "ok  " if self.ok else "FAIL"
+        return f"[{mark}] {self.rule} {self.desc}: observed={self.observed} bound={self.bound}"
+
+
+@dataclasses.dataclass
+class InvariantReport:
+    name: str
+    checks: List[Check] = dataclasses.field(default_factory=list)
+    # informational per-kind {count, bytes, max_bytes}, for printing
+    summary: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    @property
+    def failures(self) -> List[Check]:
+        return [c for c in self.checks if not c.ok]
+
+    def failed_rules(self) -> List[str]:
+        return sorted({c.rule for c in self.failures})
+
+    def format(self, *, verbose: bool = True) -> str:
+        lines = [f"invariants[{self.name}]: "
+                 + ("PASS" if self.ok else "FAIL")]
+        if self.summary:
+            for kind, s in self.summary.items():
+                lines.append(
+                    f"  {kind:<19} count={s['count']:<4} "
+                    f"bytes={s['bytes']:<12} max_bytes={s['max_bytes']}")
+        for c in self.checks:
+            if verbose or not c.ok:
+                lines.append(f"  {c}")
+        return "\n".join(lines)
+
+
+class InvariantViolation(AssertionError):
+    def __init__(self, report: InvariantReport):
+        self.report = report
+        super().__init__(report.format(verbose=False))
+
+
+def evaluate_hlo(hlo_text: str, spec: InvariantSpec) -> InvariantReport:
+    cost = hlo_mod.analyze(hlo_text)
+    report = InvariantReport(spec.name)
+    report.summary = {
+        k: {"count": int(cost.coll_counts[k]), "bytes": int(cost.coll[k]),
+            "max_bytes": int(cost.coll_max[k])}
+        for k in hlo_mod.COLLECTIVE_KINDS}
+    add = report.checks.append
+
+    for kind, bound in spec.collective_counts.items():
+        n = int(cost.coll_counts.get(kind, 0))
+        add(Check("INV001", f"{kind} count <=", n, bound, n <= bound))
+    for kind, bound in spec.min_collective_counts.items():
+        n = int(cost.coll_counts.get(kind, 0))
+        add(Check("INV001", f"{kind} count >=", n, bound, n >= bound))
+    for kind, bound in spec.collective_bytes.items():
+        b = (int(cost.total_coll()) if kind == "*"
+             else int(cost.coll.get(kind, 0)))
+        add(Check("INV002", f"{kind} bytes <=", b, bound, b <= bound))
+    for kind, bound in spec.single_collective_bytes.items():
+        b = int(cost.coll_max.get(kind, 0))
+        add(Check("INV003", f"{kind} max single <=", b, bound, b <= bound))
+    if spec.max_trip_count is not None:
+        add(Check("INV004", "max while trip <=", cost.max_trip_count,
+                  spec.max_trip_count,
+                  cost.max_trip_count <= spec.max_trip_count))
+    if not spec.allow_unknown_trip_counts:
+        add(Check("INV004", "unresolved while trips ==",
+                  cost.unknown_trip_counts, 0,
+                  cost.unknown_trip_counts == 0))
+    if not spec.allow_unknown_dtypes:
+        add(Check("INV005", "unknown-dtype elements ==",
+                  dict(cost.unknown_dtypes) or 0, 0,
+                  not cost.unknown_dtypes))
+    return report
+
+
+def compiled_hlo(fn: Callable, args: Sequence[Any]) -> str:
+    """Partitioned post-optimization HLO of ``jit(fn)(*args)``."""
+    import jax
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def check_invariants(fn: Callable, args: Sequence[Any],
+                     spec: InvariantSpec) -> InvariantReport:
+    return evaluate_hlo(compiled_hlo(fn, args), spec)
+
+
+def assert_invariants(fn: Callable, args: Sequence[Any],
+                      spec: InvariantSpec) -> InvariantReport:
+    """Compile ``fn(*args)`` and raise :class:`InvariantViolation` with the
+    full report if any bound fails. The single entry point tests,
+    ``launch/dryrun.py`` and ``scripts/check_invariants.py`` share."""
+    report = check_invariants(fn, args, spec)
+    if not report.ok:
+        raise InvariantViolation(report)
+    return report
+
+
+# --------------------------- topology invariants -----------------------------
+
+
+def check_topology(topo: Any, *, atol: float = 1e-8) -> InvariantReport:
+    """INV006/INV007 on one Topology: the typed-offset lowering must
+    reproduce the dense mixing matrix (the PR-6 wrong-neighbor bug class),
+    and the matrix must be doubly stochastic."""
+    import numpy as np
+    from repro.core import topology as topo_mod
+
+    report = InvariantReport(f"topology:{getattr(topo, 'name', '?')}")
+    W = np.asarray(topo.weights, dtype=np.float64)
+    lowered = topo_mod.offsets_matrix(topo)
+    diff = float(np.max(np.abs(W - lowered))) if W.size else 0.0
+    report.checks.append(Check(
+        "INV006", "max |offsets_matrix - weights| <=", diff, atol,
+        diff <= atol))
+    row = float(np.max(np.abs(W.sum(axis=1) - 1.0))) if W.size else 0.0
+    col = float(np.max(np.abs(W.sum(axis=0) - 1.0))) if W.size else 0.0
+    neg = float(-min(0.0, float(W.min()))) if W.size else 0.0
+    report.checks.append(Check(
+        "INV007", "doubly-stochastic defect <=", max(row, col, neg), atol,
+        max(row, col, neg) <= atol))
+    return report
+
+
+def check_schedule(schedule: Any, *, atol: float = 1e-8
+                   ) -> List[InvariantReport]:
+    """Per-entry topology invariants of a TopologySchedule."""
+    return [check_topology(e, atol=atol) for e in schedule.entries]
+
+
+def assert_topology(topo: Any, *, atol: float = 1e-8) -> InvariantReport:
+    report = check_topology(topo, atol=atol)
+    if not report.ok:
+        raise InvariantViolation(report)
+    return report

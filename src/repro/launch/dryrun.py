@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.hlo import analyze
+from repro.analysis.invariants import (InvariantSpec, InvariantViolation,
+                                       evaluate_hlo)
 from repro.analysis.roofline import from_artifact, model_flops_for
 from repro.configs import (INPUT_SHAPES, SKIPS, get_arch, list_archs)
 from repro.configs.base import ArchConfig, InputShape
@@ -205,7 +207,9 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                mode: Optional[str] = None, period: Optional[int] = None,
                remat: Optional[str] = None, microbatch: Optional[int] = None,
                out_dir: str = "artifacts/dryrun",
-               tag: str = "", verbose: bool = True) -> Dict[str, Any]:
+               tag: str = "", verbose: bool = True,
+               budget_mb: Optional[float] = None,
+               strict_invariants: bool = False) -> Dict[str, Any]:
     if (arch_id, shape_name) in SKIPS:
         return {"arch": arch_id, "shape": shape_name, "skipped": True,
                 "reason": SKIPS[(arch_id, shape_name)]}
@@ -244,11 +248,27 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost_raw = dict(compiled.cost_analysis() or {})
+    # cost_analysis() returns a per-module list of dicts on some jax
+    # versions and a flat dict on others
+    cost_raw = compiled.cost_analysis() or {}
+    if isinstance(cost_raw, (list, tuple)):
+        cost_raw = cost_raw[0] if cost_raw else {}
+    cost_raw = dict(cost_raw)
     hlo = compiled.as_text()
     hc = analyze(hlo)
     coll = hc.as_dict()
     counts = {k: int(v) for k, v in hc.coll_counts.items()}
+
+    # Declarative invariant report over the compiled HLO: always checks
+    # the byte-accounting dtype coverage (INV005); --budget-mb adds a
+    # total-collective-bytes budget (INV002, "*" kind). Informational
+    # per-kind summary rows print under --verbose either way.
+    spec = InvariantSpec(
+        name=f"{arch_id}/{shape_name}",
+        collective_bytes=({"*": int(budget_mb * 1e6)}
+                          if budget_mb is not None else {}),
+        allow_unknown_dtypes=False)
+    inv = evaluate_hlo(hlo, spec)
 
     cfg = arch.model
     if shape.kind == "train":
@@ -292,6 +312,8 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                 "generated_code_size_in_bytes"),
         },
         "model_flops": mflops,
+        "invariants": {"ok": inv.ok, "failed_rules": inv.failed_rules(),
+                       "summary": inv.summary},
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "tag": tag,
     }
@@ -310,6 +332,9 @@ def dryrun_one(arch_id: str, shape_name: str, *, multi_pod: bool = False,
               f"Tc={r.t_compute:.2e} Tm={r.t_memory:.2e} "
               f"Tcoll={r.t_collective:.2e} bound={r.bottleneck} "
               f"useful={r.usefulness:.2f}")
+        print(inv.format(verbose=True))
+    if strict_invariants and not inv.ok:
+        raise InvariantViolation(inv)
     return art
 
 
@@ -332,6 +357,12 @@ def main():
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="total collective-byte budget per step (MB); "
+                         "violations fail the run (INV002)")
+    ap.add_argument("--strict-invariants", action="store_true",
+                    help="fail the run on any invariant violation "
+                         "(otherwise the report is informational)")
     args = ap.parse_args()
 
     archs = list_archs() if (args.all or not args.arch) else [args.arch]
@@ -348,7 +379,10 @@ def main():
                                mixing=args.mixing, mode=args.mode,
                                period=args.period, remat=args.remat,
                                microbatch=args.microbatch,
-                               out_dir=args.out, tag=args.tag)
+                               out_dir=args.out, tag=args.tag,
+                               budget_mb=args.budget_mb,
+                               strict_invariants=(args.strict_invariants or
+                                                  args.budget_mb is not None))
                 except Exception as e:  # noqa: BLE001 — report-all driver
                     failures.append((a, s, mp, repr(e)))
                     print(f"[dryrun] {a} x {s} multi_pod={mp} FAILED: {e}")

@@ -390,3 +390,39 @@ def _sharded_packed_vag(sharded_loss, opt, microbatch: int):
         return opt.sharded_value_and_grad(local_vag, state, batch)
 
     return vag
+
+
+def sharded_loss_probe(sharded_loss, opt):
+    """Forward-only twin of the sharded-packed pipeline, for the static
+    analyzer (``repro.analysis.jaxpr_lint``).
+
+    AD *inlines* custom_vjp bodies, so a grad trace of a protected and a
+    raw-psum loss are structurally indistinguishable. This probe evaluates
+    ``sharded_loss`` inside the SAME 2D shard_map the pipeline uses but
+    without differentiating, so the ``psum_replicated`` /
+    ``_slice_replicated`` boundaries stay visible as
+    ``custom_vjp_call_jaxpr`` equations — the forward JXL001 rule and the
+    backward psum-count check both key off this trace."""
+    cfg = opt.cfg
+    ctx_axis = cfg.model_axis_name
+    M = int(cfg.model_parallel)
+    if opt.sharded_value_and_grad is None:
+        raise ValueError(
+            "sharded_loss_probe needs a 2D comm='axis' optimizer (mesh "
+            "with a 'model' axis); this one has no sharded execution hook")
+
+    def fwd(state, batch):
+        spec = state.spec
+        ctx = ShardCtx(spec=spec, axis_name=ctx_axis, n_shards=M)
+
+        def local_fwd(buf_local, batch_local):
+            b = jax.tree_util.tree_map(lambda x: x[0], batch_local)
+            chunks = jax.tree_util.tree_map(
+                lambda x: x[0], packing.unpack_local(buf_local, spec))
+            # identity second output satisfies the (losses, grads-buffer)
+            # out_specs contract of the sharded execution hook
+            return sharded_loss(chunks, b, ctx)[None], buf_local
+
+        return opt.sharded_value_and_grad(local_fwd, state, batch)
+
+    return fwd

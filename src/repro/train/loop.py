@@ -77,11 +77,13 @@ class DecentralizedTrainer:
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],
                  opt: DecentralizedOptimizer, *, microbatch: int = 1,
                  sharded_loss: Optional[Callable] = None,
-                 plan: Any = None):
+                 plan: Any = None, recompile_limit: Optional[int] = None):
         self.loss_fn = loss_fn
         self._microbatch = microbatch
         self._sharded_loss = sharded_loss
         self._plan = plan
+        self._recompile_limit = recompile_limit
+        self.recompile_watch = None
         self._build(opt)
 
     def _build(self, opt: DecentralizedOptimizer) -> None:
@@ -98,6 +100,14 @@ class DecentralizedTrainer:
             return self.opt.step(state, grads), jnp.mean(losses)
 
         self._step = jax.jit(step)
+        if self._recompile_limit is not None:
+            # JXL003 gate: every fit() call's abstract signature is hashed;
+            # exceeding the limit raises. Built fresh here so an elastic
+            # resize (one legitimate recompile per membership change) does
+            # not count against the budget.
+            from repro.analysis.jaxpr_lint import RecompileWatch
+            self.recompile_watch = RecompileWatch(
+                "trainer.step", limit=self._recompile_limit)
 
     def init(self, params: PyTree) -> Any:
         stacked = stack_params(params, self.opt.K)
@@ -142,6 +152,9 @@ class DecentralizedTrainer:
         t0 = time.perf_counter()
         for t in range(steps):
             batch = self._place_batch(next(batch_iter))
+            if self.recompile_watch is not None:
+                self.recompile_watch.observe(state, batch)
+                self.recompile_watch.check()
             state, loss = self._step(state, batch)
             if (t + 1) % self.opt.cfg.period == 0:
                 comm_rounds += 1

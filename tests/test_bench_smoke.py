@@ -150,3 +150,45 @@ def test_fused_step_axis_paths_execute_under_tier1():
     for rec in record["records"]:
         assert rec["pallas_axis_us_per_step"] > 0
         assert rec["pallas_axis2d_us_per_step"] > 0
+
+
+# ----------------------- committed bench trajectory --------------------------
+
+
+def _newest_trajectory():
+    """The highest-numbered committed BENCH_<pr>.json at the repo root."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    paths = [p for p in root.glob("BENCH_*.json")
+             if p.stem.split("_")[1].isdigit()]
+    return max(paths, key=lambda p: int(p.stem.split("_")[1]), default=None)
+
+
+def test_bench_trajectory_committed_and_schema_stable():
+    """The per-PR trajectory file (scripts/bench_trajectory.py) must exist
+    and its record schema must match what the benchmark code produces
+    today — the same diff the bench-smoke CI job runs, so a field rename/
+    drop/retype fails PRs before the push-time job ever sees it."""
+    from benchmarks.common import schema_of
+
+    path = _newest_trajectory()
+    assert path is not None, \
+        "no committed BENCH_<pr>.json; run scripts/bench_trajectory.py"
+    committed = json.loads(path.read_text())
+    assert {"pr", "jax_version", "fused_step",
+            "heterogeneity"} <= set(committed)
+    assert committed["pr"] == int(path.stem.split("_")[1])
+
+    if jax.device_count() < 4:
+        pytest.skip("schema comparison needs >= 4 devices so the fresh "
+                    "record exercises the axis/axis2d paths the committed "
+                    "file has (tier1.sh forces 8)")
+    fresh = fused_step.main(workers=2, size=2048, period=1,
+                            model_parallel=2)
+    assert schema_of(fresh) == schema_of(committed["fused_step"]), \
+        "fused_step record schema drifted from the committed trajectory"
+
+    from benchmarks import heterogeneity
+    fresh_het = heterogeneity.main(steps=4)
+    assert schema_of(fresh_het) == schema_of(committed["heterogeneity"]), \
+        "heterogeneity record schema drifted from the committed trajectory"

@@ -29,6 +29,7 @@ import numpy as np
 import pytest
 
 from repro.analysis.hlo import collective_summary
+from repro.analysis.invariants import InvariantSpec, evaluate_hlo
 from repro.core import make_optimizer
 from repro.kernels import pack as packing
 from repro.launch.mesh import make_worker_mesh
@@ -382,24 +383,28 @@ class TestNoFullParamAllGather:
         state = tr.init(mlp_params())
         batch = tr._place_batch(next(mlp_batches(k)))
         hlo = tr._step.lower(state, batch).compile().as_text()
-        s = collective_summary(hlo)
 
         param_bytes = 4 * (DIN * DOUT + DOUT)      # full per-worker params
         block_bytes = state.buf.nbytes // (k * m)  # one device's row shard
 
-        # no gather/reshard of parameters, full-size or otherwise
-        assert s["all-gather"]["count"] == 0
-        assert s["all-gather"]["max_bytes"] == 0
-        assert s["all-to-all"]["count"] == 0
-        assert s["reduce-scatter"]["count"] == 0
-        # gossip: permutes never exceed one device's packed block
-        assert s["collective-permute"]["count"] > 0
-        assert s["collective-permute"]["max_bytes"] <= block_bytes
-        # activation psums: the matmul psum is B×DOUT f32 (+ slack for the
-        # bias assembly and CD-Adam's per-leaf scale reductions) — far
-        # below full-parameter size
-        assert 0 < s["all-reduce"]["max_bytes"] <= 4 * B * DOUT
-        assert s["all-reduce"]["max_bytes"] < param_bytes // 16
+        # Declarative form of the acceptance gate (shared with
+        # scripts/check_invariants.py): no gather/reshard of parameters of
+        # any size; gossip permutes bounded by one device's packed block;
+        # the activation psums bounded by B×DOUT f32 (+ slack for bias
+        # assembly and CD-Adam per-leaf scales), far below parameter size.
+        spec = InvariantSpec(
+            name=f"sharded2d/{kind}/K{k}xM{m}",
+            collective_counts={"all-gather": 0, "all-to-all": 0,
+                               "reduce-scatter": 0},
+            min_collective_counts={"collective-permute": 1,
+                                   "all-reduce": 1},
+            single_collective_bytes={
+                "all-gather": 0,
+                "collective-permute": block_bytes,
+                "all-reduce": min(4 * B * DOUT, param_bytes // 16 - 1)},
+        )
+        report = evaluate_hlo(hlo, spec)
+        assert report.ok, report.format()
 
     def test_unpack_path_reshards_where_sharded_does_not(self):
         """Motivation pin (informational direction, robust assertion): the
@@ -422,5 +427,10 @@ class TestNoFullParamAllGather:
             s = collective_summary(hlo)
             totals[name] = (s["all-gather"]["bytes"]
                             + s["all-to-all"]["bytes"])
+            if name == "sharded2d":
+                report = evaluate_hlo(hlo, InvariantSpec(
+                    name="sharded2d-reshard",
+                    collective_bytes={"all-gather": 0, "all-to-all": 0}))
+                assert report.ok, report.format()
         assert totals["sharded2d"] == 0
         assert totals["unpack2d"] > totals["sharded2d"]

@@ -1,8 +1,11 @@
 """The trip-count-aware HLO analyzer (roofline input correctness)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.hlo import collective_bytes, full_cost
+from repro.analysis.hlo import (analyze, collective_bytes, full_cost,
+                                unknown_dtypes_in)
 
 
 def _compile(fn, *sds):
@@ -127,3 +130,90 @@ def test_real_sharded_program_collectives(tmp_path):
     txt = _compile(fn, x)
     coll = collective_bytes(txt)
     assert coll["total"] >= 0  # parses without error
+
+
+# ------------------------- dtype-table coverage ------------------------------
+
+
+def test_unknown_dtype_counted_not_dropped():
+    """A dtype outside the table contributes a conservative 4 bytes/elem
+    (and warns once) instead of silently zeroing the byte accounting."""
+    hlo = """
+HloModule test
+
+ENTRY %main (p0: f9z[16,8]) -> f9z[16,8] {
+  %p0 = f9z[16,8]{1,0} parameter(0)
+  ROOT %ar = f9z[16,8]{1,0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        coll = collective_bytes(hlo)
+    assert coll["all-reduce"] == 16 * 8 * 4  # conservative fallback, not 0
+    assert any("f9z" in str(w.message) for w in caught)
+
+    # every textual shape occurrence counts: 2 in the ENTRY signature +
+    # the parameter and all-reduce defs
+    cost = analyze(hlo)
+    assert cost.unknown_dtypes == {"f9z": 4 * 16 * 8}
+    assert full_cost(hlo)["unknown_dtype_elems"] == 4 * 16 * 8
+    assert unknown_dtypes_in(hlo) == {"f9z": 4 * 16 * 8}
+
+
+def test_known_exotic_dtypes_in_table():
+    """The narrow-float / sub-byte additions carry their real widths."""
+    hlo = """
+HloModule test
+
+ENTRY %main (p0: f8e4m3[32]) -> bf16[32] {
+  %p0 = f8e4m3[32]{0} parameter(0)
+  %a = f8e4m3[32]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  ROOT %c = bf16[32]{0} convert(%a)
+}
+"""
+    assert not unknown_dtypes_in(hlo)
+    assert collective_bytes(hlo)["all-reduce"] == 32 * 1  # 1 byte/elem
+
+
+def test_metadata_brackets_not_parsed_as_dtypes():
+    """Identifiers like pending[4] / bufs[1] inside op metadata must not
+    register as unknown dtypes (the INV005 false-positive class)."""
+    hlo = """
+HloModule test
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0), metadata={op_name="jit(f)/pending[4]/bufs[1]"}
+  ROOT %n = f32[4]{0} negate(%p0)
+}
+"""
+    assert unknown_dtypes_in(hlo) == {}
+
+
+def test_max_trip_count_tracked():
+    hlo = """
+HloModule test
+
+%cond (arg: (s32[], f32[64])) -> pred[] {
+  %arg = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %t = s32[] constant(9)
+  ROOT %lt = pred[] compare(%i, %t), direction=LT
+}
+
+%body (arg: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %arg = (s32[], f32[64]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[64]{0} get-tuple-element(%arg), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %tup = (s32[], f32[64]) tuple(%i2, %x)
+}
+
+ENTRY %main (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]{0}) parameter(0)
+  ROOT %w = (s32[], f32[64]) while(%p), condition=%cond, body=%body
+}
+"""
+    cost = analyze(hlo)
+    assert cost.max_trip_count == 9
+    assert full_cost(hlo)["max_trip_count"] == 9
