@@ -24,6 +24,14 @@ across four execution paths:
   around the kernels every step (kept precisely to expose what residency
   saves).
 
+Both sharded paths are additionally timed with ``overlap=True``
+(``pallas_axis_overlap`` / ``pallas_axis2d_overlap``): the delay-1 wire
+schedule that issues round r's gossip eagerly and folds it in at round
+r+1, letting the ppermute hide behind the local Adam work. The record
+pairs overlap-on vs overlap-off latency AND per-variant collective
+accounting, so a regression that grows per-round bytes or reintroduces
+an all-gather under overlap is visible per push.
+
 Each timed loop threads the stepped state back in and calls
 ``jax.block_until_ready`` on it INSIDE the loop — without that, XLA's
 async dispatch lets the cheap paths under-report by returning before the
@@ -49,11 +57,12 @@ import os
 import sys
 import time
 
-if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+if __name__ == "__main__":
     # the pallas_axis path needs one device per worker (and pallas_axis2d
     # one per worker x model shard); opt into forced host devices BEFORE
-    # jax initializes (no-op on accelerator hosts or when the caller
-    # already set XLA_FLAGS)
+    # jax initializes. repro.launch.env APPENDS to any pre-set XLA_FLAGS
+    # (a caller-forced device count still wins) instead of the old
+    # behavior of skipping the flag entirely whenever XLA_FLAGS was set.
     _workers, _mp = 8, 2
 
     def _argval(flag: str, default: int) -> int:
@@ -70,8 +79,8 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 
     _workers = _argval("--workers", _workers)
     _mp = _argval("--model-parallel", _mp)
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={_workers * max(_mp, 1)}")
+    from repro.launch import env as _env
+    _env.setup(_workers * max(_mp, 1))
 
 import jax
 import jax.numpy as jnp
@@ -199,11 +208,33 @@ def bench_kind(kind: str, K: int, size: int, period: int,
         emit(f"fused_step/{kind}_pallas_axis", us_axis,
              f"{K}-device shard_map; "
              f"{n * 4 / (us_axis / 1e6) / 1e9:.2f}GB/s param-touch")
+
+        # the same sharded step with overlap=True: round r's gossip is
+        # issued eagerly and folded in at r+1, so the ppermute can ride
+        # the async-collective stream behind the local Adam work. Same
+        # mesh, same grads — the record pairs overlap-on vs overlap-off
+        # latency AND wire accounting (bytes per round must not grow).
+        oopt = make_optimizer(kind, K=K, eta=1e-3, period=period,
+                              backend="pallas", comm="axis", mesh=mesh,
+                              overlap=True)
+        ostate = oopt.init(jax.tree_util.tree_map(jnp.copy, params))
+        gbuf_ov = jax.device_put(gbuf, ostate.buf.sharding)
+        ov_step = compile_step(lambda s, g: oopt.step(s, g), ostate,
+                               gbuf_ov)
+        us_ov = time_stepped(ov_step, ostate, gbuf_ov)
+        rec["pallas_axis_overlap_us_per_step"] = round(us_ov, 1)
+        rec["pallas_axis_overlap_collectives"] = step_collectives(ov_step)
+        emit(f"fused_step/{kind}_pallas_axis_overlap", us_ov,
+             f"{K}-device shard_map, delay-1 wire; "
+             f"{us_axis / max(us_ov, 1e-9):.2f}x vs eager")
     else:
         rec["pallas_axis_us_per_step"] = None
         rec["pallas_axis_collectives"] = None
         rec["pallas_axis_skipped"] = (
             f"needs {K} devices, have {jax.device_count()}")
+        rec["pallas_axis_overlap_us_per_step"] = None
+        rec["pallas_axis_overlap_collectives"] = None
+        rec["pallas_axis_overlap_skipped"] = rec["pallas_axis_skipped"]
 
     # pallas axis 2D: the (worker x model) mesh — each worker an M-device
     # model-parallel group over row shards of the packed state. The grads
@@ -226,6 +257,26 @@ def bench_kind(kind: str, K: int, size: int, period: int,
         emit(f"fused_step/{kind}_pallas_axis2d", us_2d,
              f"{K}x{M}-device shard_map; "
              f"{n * 4 / (us_2d / 1e6) / 1e9:.2f}GB/s param-touch")
+
+        # 2D overlap: delay rings are (K, T, rows/M, 128) row shards, so
+        # the eager schedule must keep gossip on 'worker' only — the
+        # collectives column here is the invariant the CI summary reads.
+        oopt2 = make_optimizer(kind, K=K, eta=1e-3, period=period,
+                               backend="pallas", comm="axis", mesh=mesh2,
+                               overlap=True)
+        ostate2 = oopt2.init(jax.tree_util.tree_map(jnp.copy, params))
+        gbuf2_ov = jax.device_put(
+            packing.pack(grads, ostate2.spec, dtype=ostate2.buf.dtype),
+            ostate2.buf.sharding)
+        ov2_step = compile_step(lambda s, g: oopt2.step(s, g), ostate2,
+                                gbuf2_ov)
+        us_2d_ov = time_stepped(ov2_step, ostate2, gbuf2_ov)
+        rec["pallas_axis2d_overlap_us_per_step"] = round(us_2d_ov, 1)
+        rec["pallas_axis2d_overlap_collectives"] = step_collectives(
+            ov2_step)
+        emit(f"fused_step/{kind}_pallas_axis2d_overlap", us_2d_ov,
+             f"{K}x{M}-device shard_map, delay-1 wire; "
+             f"{us_2d / max(us_2d_ov, 1e-9):.2f}x vs eager")
     else:
         rec["pallas_axis2d_us_per_step"] = None
         rec["pallas_axis2d_collectives"] = None
@@ -233,6 +284,9 @@ def bench_kind(kind: str, K: int, size: int, period: int,
             "disabled (--model-parallel <= 1)" if M <= 1 else
             f"needs {K * M} devices (model_parallel={M}), "
             f"have {jax.device_count()}")
+        rec["pallas_axis2d_overlap_us_per_step"] = None
+        rec["pallas_axis2d_overlap_collectives"] = None
+        rec["pallas_axis2d_overlap_skipped"] = rec["pallas_axis2d_skipped"]
 
     # pallas repack: the pre-residency dispatch, pack/unpack every step
     rstate, rstep = _repack_state_and_step(kind, popt, params)

@@ -29,6 +29,12 @@ from __future__ import annotations
 import argparse
 import json
 
+if __name__ == "__main__":
+    # K=8 workers; force matching host devices BEFORE jax initializes,
+    # appending to (never clobbering) a pre-set XLA_FLAGS
+    from repro.launch import env as _env
+    _env.setup(8)
+
 import jax
 
 from benchmarks.common import TASK, emit

@@ -15,17 +15,16 @@ import json
 import os
 import sys
 
-# fused_step's axis2d path needs workers x model_parallel devices; force
-# them BEFORE jax initializes (same convention as scripts/tier1.sh)
-_DEVICES = os.environ.get("REPRO_HOST_DEVICES", "8")
-os.environ.setdefault(
-    "XLA_FLAGS",
-    f"--xla_force_host_platform_device_count={_DEVICES}")
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
-
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
+
+# fused_step's axis2d path needs workers x model_parallel devices; force
+# them BEFORE jax initializes (same convention as scripts/tier1.sh —
+# repro.launch.env appends to a pre-set XLA_FLAGS instead of skipping)
+from repro.launch import env as _env  # noqa: E402
+
+_env.setup(platform="cpu")
 
 
 def main(argv=None) -> int:

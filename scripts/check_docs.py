@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Docs gate: the documentation must not rot.
+
+Two passes over README.md, ROADMAP.md, and docs/*.md:
+
+1. **link check** — every relative markdown link target must exist on
+   disk (anchors are stripped; http(s) links are left to humans), so a
+   renamed file or section page fails the PR that renamed it;
+2. **fenced-block execution** — every ```python block in docs/ is
+   executed, blocks within one file sharing a namespace in order (so a
+   later block can build on an earlier import). A doc that drifts from
+   the real API fails here instead of misleading the next reader.
+   ```bash blocks and other languages are not executed.
+
+The python blocks in docs/ call repro.launch.env.setup() themselves
+before importing jax (that is part of what they document); this script
+only needs PYTHONPATH to resolve `repro`.
+
+    PYTHONPATH=src python scripts/check_docs.py [--root DIR]
+"""
+import argparse
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def doc_files(root: str):
+    out = [p for p in (os.path.join(root, "README.md"),
+                       os.path.join(root, "ROADMAP.md"))
+           if os.path.exists(p)]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return out
+
+
+def check_links(path: str, root: str):
+    """Relative link targets that do not exist on disk."""
+    bad = []
+    base = os.path.dirname(path)
+    text = open(path).read()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:          # pure in-page anchor
+            continue
+        resolved = os.path.normpath(os.path.join(base, target))
+        if not os.path.exists(resolved):
+            bad.append((os.path.relpath(path, root), target))
+    return bad
+
+
+def python_blocks(path: str):
+    """(start_line, source) for each ```python fence in the file."""
+    blocks, buf, start, lang = [], None, 0, None
+    for i, line in enumerate(open(path).read().splitlines(), 1):
+        m = FENCE_RE.match(line)
+        if m and buf is None:
+            lang, start, buf = m.group(1).lower(), i + 1, []
+        elif line.strip() == "```" and buf is not None:
+            if lang == "python":
+                blocks.append((start, "\n".join(buf)))
+            buf = None
+        elif buf is not None:
+            buf.append(line)
+    return blocks
+
+
+def run_blocks(path: str, root: str):
+    """Execute the file's python blocks in one shared namespace."""
+    failures = []
+    ns = {"__name__": f"docs:{os.path.basename(path)}"}
+    for start, src in python_blocks(path):
+        try:
+            code = compile(src, f"{path}:{start}", "exec")
+            exec(code, ns)  # noqa: S102 - executing our own docs is the gate
+        except Exception as e:  # noqa: BLE001 - report, don't crash the gate
+            failures.append((os.path.relpath(path, root), start,
+                             f"{type(e).__name__}: {e}"))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(__file__), ".."))
+    ap.add_argument("--no-exec", action="store_true",
+                    help="link check only (no jax, fast)")
+    ns = ap.parse_args(argv)
+    root = os.path.abspath(ns.root)
+
+    ok = True
+    files = doc_files(root)
+    for path in files:
+        bad = check_links(path, root)
+        for where, target in bad:
+            ok = False
+            print(f"[FAIL] {where}: broken link -> {target}")
+    print(f"link check: {len(files)} files"
+          + ("" if ok else " (broken links above)"))
+
+    if not ns.no_exec:
+        docs_dir = os.path.join(root, "docs")
+        exec_files = [p for p in files
+                      if os.path.dirname(p) == docs_dir]
+        n_blocks = 0
+        for path in exec_files:
+            blocks = python_blocks(path)
+            n_blocks += len(blocks)
+            for where, line, err in run_blocks(path, root):
+                ok = False
+                print(f"[FAIL] {where}:{line}: {err}")
+        print(f"executed {n_blocks} python blocks from "
+              f"{len(exec_files)} docs files")
+
+    print("check_docs: " + ("PASS" if ok else "FAIL"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,7 +2,8 @@
 """CI gate: the three-pass shard-safety analyzer over the shipped configs.
 
 Sweeps reference/packed/axis/axis2d x D-Adam/CD-Adam x plain/schedule/
-staleness, evaluates each compiled step against its derived InvariantSpec,
+staleness/overlap, evaluates each compiled step against its derived
+InvariantSpec,
 lints the jaxprs, checks the topology zoo, and runs the known-bug corpus
 (which must FAIL with the expected rule IDs). Exit code 0 iff everything
 holds.
@@ -15,15 +16,16 @@ import argparse
 import os
 import sys
 
-# the axis2d configs need K x M = 8 devices; force host devices BEFORE jax
-# imports (same convention as scripts/tier1.sh and launch/dryrun.py)
-_DEVICES = os.environ.get("REPRO_HOST_DEVICES", "8")
-os.environ.setdefault(
-    "XLA_FLAGS",
-    f"--xla_force_host_platform_device_count={_DEVICES}")
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
-
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# the axis2d configs need K x M = 8 devices; force host devices BEFORE jax
+# imports. repro.launch.env APPENDS to a pre-set XLA_FLAGS (a caller-
+# forced count wins) instead of skipping the flag whenever XLA_FLAGS was
+# set at all, which used to leave the sweep device-starved under e.g. a
+# user-exported dump flag.
+from repro.launch import env as _env  # noqa: E402
+
+_env.setup(platform="cpu")
 
 from repro.analysis import check as check_mod  # noqa: E402
 

@@ -37,4 +37,17 @@ if python -c "import xdist" >/dev/null 2>&1; then
   XDIST_ARGS=(-n auto --max-worker-restart 0 -p no:cacheprovider)
 fi
 
+# Doctests of the documented public API. Scoped to the seven modules
+# with runnable examples — --doctest-modules over all of src/ would
+# import every module (some gate on devices/deps) and execute every
+# stray example. set -e aborts the run if any example drifted.
+python -m pytest -q --doctest-modules \
+  src/repro/core/api.py \
+  src/repro/core/topology.py \
+  src/repro/core/schedule.py \
+  src/repro/train/loop.py \
+  src/repro/train/grad.py \
+  src/repro/checkpoint/io.py \
+  src/repro/analysis/invariants.py
+
 exec python -m pytest -x -q "${XDIST_ARGS[@]}" "$@"

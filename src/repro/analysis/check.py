@@ -2,7 +2,7 @@
 
 One entry point (:func:`run`) sweeps the shipped execution configs
 (reference / packed / axis / axis2d × D-Adam / CD-Adam × plain / schedule
-/ staleness variants) and, per config:
+/ staleness / overlap variants) and, per config:
 
 1. **jaxpr lint** — wrong-axis collectives on the full compiled step
    (JXL002), raw-collective rules (JXL001, forward + backward psum
@@ -77,7 +77,7 @@ def _batch(K):
 class SweepConfig:
     backend: str            # 'reference' | 'packed' | 'axis' | 'axis2d'
     kind: str               # 'd-adam' | 'cd-adam'
-    variant: str            # 'plain' | 'schedule' | 'stale'
+    variant: str            # 'plain' | 'schedule' | 'stale' | 'overlap'
     K: int = 4
     M: int = 1
 
@@ -96,7 +96,7 @@ class SweepConfig:
 
 BACKENDS = ("reference", "packed", "axis", "axis2d")
 KINDS = ("d-adam", "cd-adam")
-VARIANTS = ("plain", "schedule", "stale")
+VARIANTS = ("plain", "schedule", "stale", "overlap")
 
 
 def sweep_configs(backends: Sequence[str] = BACKENDS,
@@ -128,6 +128,11 @@ def _build(cfg: SweepConfig):
         kw["topology"] = "one-peer-exp"
     if cfg.variant == "stale":
         kw.update(staleness=1, straggler_rate=0.25)
+    if cfg.variant == "overlap":
+        # the delay-1 eager wire schedule: must satisfy the SAME spec as
+        # the plain config (no all-gathers, block-bounded permute bytes)
+        # on every backend incl. the 2D mesh
+        kw["overlap"] = True
     extra: Dict[str, Any] = {}
     if cfg.backend in ("packed", "axis", "axis2d"):
         kw["backend"] = "pallas"

@@ -256,6 +256,13 @@ class HloCost:
     # full-parameter size in this step?" regression instrument
     coll_max: Dict[str, float] = dataclasses.field(
         default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    # matched async start/done pairs per kind: XLA splits a collective
+    # into <kind>-start / <kind>-done exactly when it can overlap the
+    # wire with independent compute (async collectives / latency-hiding
+    # scheduler, repro.launch.env) — each -done closes one pair, so
+    # counting them counts the collectives that actually ran async
+    coll_async: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
     unknown_trip_counts: int = 0
     # largest single resolved while-loop trip count (not nested-multiplied)
     max_trip_count: int = 0
@@ -307,6 +314,7 @@ def analyze(text: str) -> HloCost:
             base_kind = re.sub(r"-(start|done)$", "", ins.op)
             if base_kind in COLLECTIVE_KINDS:
                 if ins.op.endswith("-done"):
+                    cost.coll_async[base_kind] += mult
                     continue
                 one = _collective_operand_bytes(ins, base_kind, comp)
                 cost.coll[base_kind] += mult * one
@@ -417,7 +425,8 @@ def collective_counts(hlo_text: str) -> Dict[str, int]:
 
 
 def collective_summary(hlo_text: str) -> Dict[str, Dict[str, int]]:
-    """Per-kind {count, bytes, max_bytes} — the communication regression
+    """Per-kind {count, bytes, max_bytes, async_pairs} — the
+    communication regression
     instrument. ``count``/``bytes`` carry while-loop trip multipliers;
     ``max_bytes`` is the largest SINGLE collective of that kind, which is
     what "no all-gather of full-parameter size" assertions compare against
@@ -426,7 +435,8 @@ def collective_summary(hlo_text: str) -> Dict[str, Dict[str, int]]:
     c = analyze(hlo_text)
     return {k: {"count": int(c.coll_counts[k]),
                 "bytes": int(c.coll[k]),
-                "max_bytes": int(c.coll_max[k])}
+                "max_bytes": int(c.coll_max[k]),
+                "async_pairs": int(c.coll_async[k])}
             for k in COLLECTIVE_KINDS}
 
 

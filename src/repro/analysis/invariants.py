@@ -177,9 +177,37 @@ def check_invariants(fn: Callable, args: Sequence[Any],
 
 def assert_invariants(fn: Callable, args: Sequence[Any],
                       spec: InvariantSpec) -> InvariantReport:
-    """Compile ``fn(*args)`` and raise :class:`InvariantViolation` with the
-    full report if any bound fails. The single entry point tests,
-    ``launch/dryrun.py`` and ``scripts/check_invariants.py`` share."""
+    """Compile ``fn(*args)`` and gate its HLO against ``spec``.
+
+    The single entry point tests, ``launch/dryrun.py`` and
+    ``scripts/check_invariants.py`` share: lowers ``jit(fn)`` for
+    ``args``, runs the trip-count-aware collective accounting over the
+    partitioned post-optimization HLO, and evaluates every bound the
+    spec declares (INV001-INV005; absent keys are unchecked).
+
+    Args:
+      fn: the function under test (NOT pre-jitted; this compiles it).
+      args: example arguments — their shapes/shardings decide what is
+        compiled, exactly like a ``jit`` call's.
+      spec: the :class:`InvariantSpec` bounds to enforce.
+
+    Returns:
+      The passing :class:`InvariantReport` (per-kind collective summary
+      plus every evaluated check), for logging.
+
+    Raises:
+      InvariantViolation: any bound fails; the exception message is the
+        report's failure lines and ``.report`` carries the full object.
+
+    Example:
+      >>> import jax.numpy as jnp
+      >>> from repro.analysis.invariants import (InvariantSpec,
+      ...                                        assert_invariants)
+      >>> spec = InvariantSpec(name="elementwise",
+      ...                      collective_counts={"all-gather": 0})
+      >>> assert_invariants(lambda x: x * 2, (jnp.ones(8),), spec).ok
+      True
+    """
     report = check_invariants(fn, args, spec)
     if not report.ok:
         raise InvariantViolation(report)

@@ -142,7 +142,38 @@ def place_like(portable: PyTree, like: PyTree) -> PyTree:
     restored or resized worker holds no valid in-flight neighbor traffic.
     Plain array leaves are re-placed with their ``like`` counterpart's
     sharding. Shared by ``restore`` and the elastic-membership resize
-    path (``repro.core.elastic``)."""
+    path (``repro.core.elastic``).
+
+    Args:
+      portable: the backend-agnostic tree (what ``save`` writes /
+        ``load`` returns): packed states in their unpacked NamedTuple
+        form, no transient comm buffers.
+      like: a live state tree of the SAME structure at the adapt
+        boundary — typically ``opt.init(params)`` of the optimizer the
+        values are being restored onto. Decides backend layout,
+        ``row_shards``, sharding, and which transient buffers to
+        rebuild cold.
+
+    Returns:
+      ``portable``'s values in ``like``'s layout and placement.
+
+    Raises:
+      ValueError / TypeError: structural mismatch between the trees
+        (propagated from the underlying flatten/repack).
+
+    Example:
+      >>> import jax, jax.numpy as jnp
+      >>> from repro.checkpoint.io import place_like
+      >>> from repro.core import make_optimizer
+      >>> params = {"w": jnp.ones((2, 8, 2))}
+      >>> ref = make_optimizer("d-adam", K=2, backend="reference")
+      >>> pal = make_optimizer("d-adam", K=2, backend="pallas")
+      >>> portable = ref.init(params)            # reference NamedTuple
+      >>> packed = place_like(portable, pal.init(params))
+      >>> bool(jnp.all(pal.params_of(packed)["w"]
+      ...              == ref.params_of(portable)["w"]))
+      True
+    """
     outer_leaves, outer_td = jax.tree_util.tree_flatten(
         like, is_leaf=_needs_adapt)
     slots = outer_td.flatten_up_to(portable)

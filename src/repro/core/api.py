@@ -82,15 +82,21 @@ def worker_pspec_tree(tree: PyTree, K: int, axis_name: str,
 
     With ``model_axis`` (the 2D worker × model mesh) packed
     ``(K, rows, 128)`` buffers — recognized by their 3-D lane-aligned
-    shape — additionally put their row dim on the model axis; non-buffer
-    leaves (the scalar count, batch stacks) stay replicated over it."""
+    shape — additionally put their row dim on the model axis, and
+    ``(K, T, rows, 128)`` payload delay rings (a packed buffer with a
+    T-slot time dim at axis 1; CD-Adam staleness/overlap) their row dim
+    likewise; non-buffer leaves (the scalar count, batch stacks, scale
+    rings) stay replicated over it."""
     def one(leaf):
         shape = getattr(leaf, "shape", ())
         if len(shape) > worker_dim and shape[worker_dim] == K:
             entries = [None] * worker_dim + [axis_name]
-            if (model_axis is not None and worker_dim == 0
-                    and _pack.is_packed_buffer_shape(shape, K)):
-                entries.append(model_axis)
+            if model_axis is not None and worker_dim == 0:
+                if _pack.is_packed_buffer_shape(shape, K):
+                    entries.append(model_axis)
+                elif (len(shape) == 4 and _pack.is_packed_buffer_shape(
+                        (shape[0],) + shape[2:], K)):
+                    entries.extend([None, model_axis])
             return P(*entries)
         return P()
     return jax.tree_util.tree_map(one, tree)
@@ -295,8 +301,82 @@ def make_optimizer(
     staleness: Optional[int] = None,
     straggler_rate: float = 0.0,
     straggler_seed: int = 0,
+    overlap: bool = False,
     **comp_kw,
 ) -> DecentralizedOptimizer:
+    """Build a decentralized optimizer over ``K`` workers.
+
+    The single factory behind every entrypoint: picks the algorithm, the
+    execution backend, and the communication lowering, validates the
+    combination, and returns a :class:`DecentralizedOptimizer` whose
+    ``init`` / ``step`` / ``round`` closures carry the whole config.
+
+    Args:
+      kind: ``"d-adam"`` (Alg. 1), ``"cd-adam"`` (Alg. 2, compressed
+        gossip with error feedback), ``"d-adam-vanilla"`` (period forced
+        to 1), or the baselines ``"d-psgd"`` / ``"adam"``.
+      K: number of workers. Params enter ``opt.init`` stacked with a
+        leading K dim on every leaf.
+      topology: zoo name (``"ring"``, ``"torus"``, ``"exponential"``,
+        ``"fully_connected"``), a schedule spec (``"one-peer-exp"``,
+        ``"rand-ring:N"``), or a built ``Topology`` /
+        ``TopologySchedule`` (K-checked).
+      period: local steps per gossip round (the paper's p).
+      eta, beta1, beta2, tau: Adam step size, moment decays, and the
+        denominator floor epsilon (the paper writes it tau).
+      weight_decay: decoupled (AdamW-style) weight decay.
+      gamma: CD-Adam consensus step size (ignored by D-Adam).
+      compressor: CD-Adam wire compressor — ``"sign"`` (the only one the
+        pallas backend fuses), ``"topk"``, ``"qsgd"``, ... or a built
+        ``Compressor``; ``**comp_kw`` is forwarded to its factory.
+      scales: CD-Adam sign-scale granularity, ``"leaf"`` or ``"global"``.
+      mixing: ``"roll"`` lowers gossip as per-offset shifts;
+        ``"dense"`` as a mixing matmul (static graphs only).
+      moment_dtype: storage dtype for the Adam moments (e.g.
+        ``jnp.bfloat16``); ``None`` keeps the param dtype.
+      backend: ``"reference"`` (pytree-of-leaves math, debuggable) or
+        ``"pallas"`` (packed ``(K, rows, 128)`` resident state, fused
+        kernels).
+      comm: how "worker k reads worker (k+s) % K" lowers — ``"stacked"``
+        rolls over the stacked dim on one device; ``"axis"`` ppermutes
+        inside a ``shard_map`` over ``mesh``. Same math, pinned by the
+        comm-parity tests.
+      mesh: required for ``comm="axis"``; a model axis of size M > 1 on
+        it (pallas only) row-shards the packed state M-ways per worker.
+      axis_name, model_axis_name: mesh axis names.
+      staleness: bounded-staleness gossip (tau rounds); with
+        ``straggler_rate`` / ``straggler_seed`` modelling late payloads.
+        Mutually exclusive with ``overlap``.
+      overlap: delay-1 wire schedule — round r issues its payload and
+        round r+1 mixes it, so the exchange overlaps the next local
+        steps. For CD-Adam this is bitwise the ``staleness=1`` schedule
+        with every payload late.
+      **comp_kw: forwarded to the compressor factory (e.g. ``k=...``
+        for topk).
+
+    Returns:
+      A :class:`DecentralizedOptimizer`; use ``opt.init(params)``,
+      ``opt.step(state, grads)``, ``opt.params_of(state)``.
+
+    Raises:
+      ValueError: for inconsistent combinations — e.g. ``scales`` on a
+        non-CD-Adam kind, ``mixing="dense"`` with a schedule or with
+        ``overlap``, a non-sign compressor under ``backend="pallas"``,
+        ``staleness`` together with ``overlap``.
+      KeyError: unknown topology or kind name.
+
+    Example:
+      >>> import jax, jax.numpy as jnp
+      >>> from repro.core import make_optimizer
+      >>> opt = make_optimizer("d-adam", K=4, eta=1e-2, period=2,
+      ...                      topology="ring")
+      >>> params = {"w": jnp.ones((4, 8, 2))}   # leading K dim
+      >>> state = opt.init(params)
+      >>> grads = jax.tree_util.tree_map(jnp.ones_like, params)
+      >>> state = opt.step(state, grads)
+      >>> opt.params_of(state)["w"].shape
+      (4, 8, 2)
+    """
     topo = resolve_topology(topology, K)
     kind = kind.lower().replace("_", "-")
     if scales != "leaf" and kind not in ("cd-adam", "cdadam"):
@@ -336,7 +416,8 @@ def make_optimizer(
                           model_axis_name=model_axis_name,
                           staleness=staleness,
                           straggler_rate=straggler_rate,
-                          straggler_seed=straggler_seed)
+                          straggler_seed=straggler_seed,
+                          overlap=overlap)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=None,
@@ -362,7 +443,8 @@ def make_optimizer(
                            model_axis_name=model_axis_name,
                            scales=scales, staleness=staleness,
                            straggler_rate=straggler_rate,
-                           straggler_seed=straggler_seed)
+                           straggler_seed=straggler_seed,
+                           overlap=overlap)
         cfg.validate()
         opt = DecentralizedOptimizer(
             name=kind, topo=topo, cfg=cfg, compressor=comp,
@@ -374,6 +456,8 @@ def make_optimizer(
         )
 
     elif kind in ("d-psgd", "dpsgd"):
+        if overlap:
+            raise ValueError("overlap is wired for d-adam / cd-adam")
         if backend != "reference":
             raise ValueError("d-psgd has no kernel backend; "
                              "use backend='reference'")

@@ -212,11 +212,26 @@ def _shift_payload(payload: PyTree, s: int, topo: Topology,
 # in order, exactly once, at most tau rounds late.
 
 
+def _wire_tau(cfg: CDAdamConfig) -> int:
+    """Rounds of wire delay the payload rings implement: the explicit
+    staleness bound, or EXACTLY one round under ``cfg.overlap`` — the
+    eager-issue schedule is the tau=1 ring path with an all-ones delay
+    table, which is what pins overlap ≡ staleness(1) bitwise."""
+    if cfg.overlap:
+        return 1
+    return int(cfg.staleness or 0)
+
+
 def _payload_delays(cfg: CDAdamConfig, K: int, deg: int) -> np.ndarray:
     """Static (K, deg) per-edge delay table, reproducible from the seed.
     A fraction ``straggler_rate`` of edges is persistently slow (delay
-    uniform in [1, tau]); the rest deliver same-round."""
-    tau = int(cfg.staleness or 0)
+    uniform in [1, tau]); the rest deliver same-round. Under
+    ``cfg.overlap`` EVERY edge is exactly one round late: round r issues
+    its payload and round r+1 applies it, so the wire exchange overlaps
+    the p local Adam steps in between."""
+    if cfg.overlap:
+        return np.ones((K, deg), np.int32)
+    tau = _wire_tau(cfg)
     if tau == 0 or cfg.straggler_rate <= 0.0:
         return np.zeros((K, deg), np.int32)
     rs = np.random.RandomState(cfg.straggler_seed)
@@ -290,7 +305,7 @@ def init(params_stacked: PyTree, cfg: CDAdamConfig,
     offs = comm_offsets(topo)
     if not offs and topo.K > 1:
         raise ValueError("CD-Adam runtime requires a shift-invariant topology")
-    tau = int(cfg.staleness or 0)
+    tau = _wire_tau(cfg)
     zeros = jax.tree_util.tree_map(jnp.zeros_like, params_stacked)
     # xhat_0 = 0 (CHOCO convention); neighbor copies likewise — one per
     # offset that can EVER be active (a schedule's union edge set).
@@ -358,14 +373,15 @@ def _comm_round(state_half: CDAdamState, topo: Topology, cfg: CDAdamConfig,
     # comm mode), then is decoded locally. Under cfg.staleness > 0 the
     # received payload detours through the per-edge delay ring: slow edges
     # apply it up to tau rounds late, in order, never dropped.
-    tau = int(cfg.staleness or 0)
+    tau = _wire_tau(cfg)
     delays = _payload_delays(cfg, topo.K, len(topo.offsets))
     new_hat_nbrs = []
     new_pending = []
     for i, (s, hn) in enumerate(zip(topo.offsets, hat_nbrs)):
         recv_enc = _shift_payload(q_enc, s, topo, cfg)
         ring = None if pending is None else pending[i]
-        use_enc, ring = _delayed_recv(recv_enc, ring, delays[:, i], r, tau)
+        d_col = dadam._local_worker_rows(jnp.asarray(delays[:, i]), cfg)
+        use_enc, ring = _delayed_recv(recv_enc, ring, d_col, r, tau)
         recv = _decode_stacked(comp, use_enc, resid)
         new_hat_nbrs.append(jax.tree_util.tree_map(
             lambda h, q: h + q.astype(h.dtype), hn, recv))
@@ -397,11 +413,11 @@ def _comm_round_pallas(state_half: CDAdamState, topo: Topology,
             "leaf — use the packed-resident runtime (opt.init's default)")
 
     x_half, mom, hat_self, hat_nbrs, pending = state_half
-    if pending is not None:
+    if pending is not None or cfg.overlap:
         raise ValueError(
-            "staleness > 0 is wired for the packed-resident pallas runtime "
-            "and the reference backend; the pytree (repack) pallas path "
-            "does not thread payload rings")
+            "staleness > 0 / overlap are wired for the packed-resident "
+            "pallas runtime and the reference backend; the pytree (repack) "
+            "pallas path does not thread payload rings")
     x_new = _mix_with_hats(x_half, hat_self, hat_nbrs, topo, cfg)
 
     enc = jax.tree_util.tree_map(
@@ -462,7 +478,7 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
     maxis = (cfg.model_axis_name
              if getattr(cfg, "model_parallel", 1) > 1 else None)
     axis = cfg.axis_name if cfg.comm == "axis" else None
-    tau = int(cfg.staleness or 0)
+    tau = _wire_tau(cfg)
     pending = state_half.pending
     delays = _payload_delays(cfg, topo.K, len(topo.offsets))
 
@@ -472,8 +488,9 @@ def _comm_round_packed(state_half: PackedCDAdamState, topo: Topology,
         q_recv = dadam.shift_worker(q_buf, shift, topo.K, axis)
         sc_recv = dadam.shift_worker(scales, shift, topo.K, axis)
         ring = None if pending is None else pending[i]
+        d_col = dadam._local_worker_rows(jnp.asarray(delays[:, i]), cfg)
         recv, ring = _delayed_recv({"q": q_recv, "scale": sc_recv}, ring,
-                                   delays[:, i], r, tau)
+                                   d_col, r, tau)
         return recv["q"], recv["scale"], ring
 
     if cfg.scales == "worker":

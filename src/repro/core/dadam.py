@@ -89,6 +89,13 @@ class DAdamConfig:
     straggler_rate: float = 0.0  # probability a neighbor payload misses a
                                 # round (deterministic per straggler_seed)
     straggler_seed: int = 0
+    overlap: bool = False       # comm/compute overlap: issue round r's
+                                # gossip payload eagerly and fold it into
+                                # round r+1's mix, so the wire exchange
+                                # runs concurrently with the next p local
+                                # Adam steps. Wire-equivalent to a
+                                # staleness bound of one round with EVERY
+                                # payload exactly one round late.
 
     def validate(self) -> None:
         if not 0 <= self.beta1 < 1 or not 0 <= self.beta2 < 1:
@@ -156,6 +163,17 @@ class DAdamConfig:
             raise ValueError(
                 "straggler_rate > 0 models delayed payload arrivals and "
                 "needs a staleness bound (set staleness=tau)")
+        if self.overlap:
+            if self.staleness is not None:
+                raise ValueError(
+                    "overlap IS the staleness tau=1 wire schedule (every "
+                    "payload exactly one round late); combining it with "
+                    "an explicit staleness bound is ambiguous — choose "
+                    "one")
+            if self.mixing == "dense":
+                raise ValueError(
+                    "overlap double-buffers per-offset neighbor payloads "
+                    "and requires the shift lowering (mixing='roll')")
 
 
 class AdamMoments(NamedTuple):
@@ -454,6 +472,50 @@ def gossip_shift_stale(params: PyTree, stale: StaleBufs, topo: Topology,
     return mixed, StaleBufs(tuple(new_bufs), new_age)
 
 
+def gossip_shift_overlap(params: PyTree, stale: StaleBufs, topo: Topology,
+                         cfg: DAdamConfig) -> Tuple[PyTree, StaleBufs]:
+    """Comm/compute-overlapped shift gossip: round r ISSUES this round's
+    neighbor exchange (the fresh shifts) but MIXES the payloads issued at
+    round r-1, held in the staleness buffers. The issued shifts have no
+    data dependence on the mixed result, so XLA's async collectives +
+    latency-hiding scheduler (see repro.launch.env) can run the wire
+    exchange concurrently with the next p local Adam steps — a uniform
+    delay-1 wire schedule, the deterministic cousin of
+    :func:`gossip_shift_stale`'s bounded-staleness take.
+
+    Cold buffers (first round, and post-:mod:`~repro.core.elastic` resize,
+    marked by ``age >= COLD_AGE``) fold the fresh payload instead — the
+    same forced-fresh rule the staleness bound applies at ``age >= tau``.
+    """
+    if not topo.offsets:
+        return params, stale
+    axis = cfg.axis_name if cfg.comm == "axis" else None
+    cold = stale.age >= COLD_AGE
+    fresh, used = [], []
+    for i, s in enumerate(topo.offsets):
+        c = cold[:, i]
+
+        def issue(x, s=s):
+            return shift_worker(x, s, topo.K, axis)
+
+        def pick(f, b, c=c):
+            cc = c.reshape((-1,) + (1,) * (f.ndim - 1))
+            return jnp.where(cc, f, b.astype(f.dtype))
+
+        f = jax.tree_util.tree_map(issue, params)
+        fresh.append(f)
+        used.append(jax.tree_util.tree_map(pick, f, stale.bufs[i]))
+
+    def mix(x, *nbrs):
+        acc = topo.self_weight * x.astype(jnp.float32)
+        for w, nb in zip(topo.offset_weights, nbrs):
+            acc = acc + w * nb.astype(jnp.float32)
+        return acc.astype(x.dtype)
+
+    mixed = jax.tree_util.tree_map(mix, params, *used)
+    return mixed, StaleBufs(tuple(fresh), jnp.zeros_like(stale.age))
+
+
 # -------------------- packed-resident gossip (pallas) ----------------------
 
 
@@ -540,6 +602,37 @@ def gossip_packed_stale(buf: jax.Array, stale: StaleBufs, topo: Topology,
     return mixed, StaleBufs(tuple(used), new_age)
 
 
+def gossip_packed_overlap(buf: jax.Array, stale: StaleBufs, topo: Topology,
+                          cfg: DAdamConfig
+                          ) -> Tuple[jax.Array, StaleBufs]:
+    """Packed twin of :func:`gossip_shift_overlap`: issue this round's
+    shifted packed blocks, mix last round's buffered ones (fresh on cold
+    start / post-resize), with the same fused payload-mix kernel and f32
+    accumulation order as the staleness path."""
+    from repro.kernels import ops
+    from repro.kernels.gossip import MAX_FUSED_DEGREE
+
+    if not topo.offsets:
+        return buf, stale
+    axis = cfg.axis_name if cfg.comm == "axis" else None
+    cold = stale.age >= COLD_AGE
+    fresh, used = [], []
+    for i, s in enumerate(topo.offsets):
+        c = cold[:, i].reshape((-1, 1, 1))
+        f = shift_worker(buf, s, topo.K, axis)
+        fresh.append(f)
+        used.append(jnp.where(c, f, stale.bufs[i].astype(buf.dtype)))
+    if axis is None and len(used) <= MAX_FUSED_DEGREE:
+        mixed = ops.payload_mix(buf, used, topo.offset_weights,
+                                topo.self_weight)
+    else:
+        acc = topo.self_weight * buf.astype(jnp.float32)
+        for w, u in zip(topo.offset_weights, used):
+            acc = acc + w * u.astype(jnp.float32)
+        mixed = acc.astype(buf.dtype)
+    return mixed, StaleBufs(tuple(fresh), jnp.zeros_like(stale.age))
+
+
 # --------------------- round dispatch (schedule-aware) ----------------------
 
 
@@ -553,13 +646,16 @@ def _gossip_round(params: PyTree, stale: Optional[StaleBufs],
         p, st = op
         if st is None:
             return gossip(p, topo_r, cfg), None
+        if cfg.overlap:
+            return gossip_shift_overlap(p, st, topo_r, cfg)
         return gossip_shift_stale(p, st, topo_r, cfg, r)
 
     if isinstance(topo, TopologySchedule):
         # per-edge payload buffers need the SAME offset tuple every round
-        # (union views); without live buffers — no staleness, or tau=0
-        # where they are never read — each round gossips its own entry
-        use_union = stale is not None and int(cfg.staleness or 0) > 0
+        # (union views); without live buffers — no staleness/overlap, or
+        # tau=0 where they are never read — each round gossips its entry
+        use_union = stale is not None and (
+            int(cfg.staleness or 0) > 0 or cfg.overlap)
         views = topo.union_views() if use_union else topo.entries
         if len(views) == 1:
             return once((params, stale), views[0])
@@ -579,10 +675,13 @@ def _gossip_packed_round(buf: jax.Array, stale: Optional[StaleBufs],
         b, st = op
         if st is None:
             return gossip_packed(b, topo_r, cfg), None
+        if cfg.overlap:
+            return gossip_packed_overlap(b, st, topo_r, cfg)
         return gossip_packed_stale(b, st, topo_r, cfg, r)
 
     if isinstance(topo, TopologySchedule):
-        use_union = stale is not None and int(cfg.staleness or 0) > 0
+        use_union = stale is not None and (
+            int(cfg.staleness or 0) > 0 or cfg.overlap)
         views = topo.union_views() if use_union else topo.entries
         if len(views) == 1:
             return once((buf, stale), views[0])
@@ -702,18 +801,20 @@ def init(params_stacked: PyTree, cfg: DAdamConfig,
          topo: "Topology | TopologySchedule | None" = None
          ) -> "DAdamState | PackedDAdamState":
     cfg.validate()
-    if cfg.staleness is not None and topo is None:
+    needs_bufs = cfg.staleness is not None or cfg.overlap
+    if needs_bufs and topo is None:
         raise ValueError(
-            "cfg.staleness buffers one payload per topology offset; "
-            "init needs the topology (pass topo=, as make_optimizer does)")
+            "cfg.staleness/cfg.overlap buffer one payload per topology "
+            "offset; init needs the topology (pass topo=, as "
+            "make_optimizer does)")
     state = DAdamState(params_stacked, init_moments(params_stacked, cfg))
     if cfg.backend == "pallas":
         packed = PackedDAdamState.from_unpacked(
             state, row_shards=cfg.model_parallel)
-        if cfg.staleness is not None:
+        if needs_bufs:
             packed = packed.with_stale(init_stale(packed.buf, topo))
         return packed
-    if cfg.staleness is not None:
+    if needs_bufs:
         state = state._replace(stale=init_stale(params_stacked, topo))
     return state
 
@@ -735,9 +836,69 @@ def _fused_local_packed(state: PackedDAdamState, grads: Any,
     return po, mo, vo, state.count + 1
 
 
+def _gossip_adam_eligible(topo: "Topology | TopologySchedule",
+                          cfg: DAdamConfig) -> bool:
+    """True when the synchronous comm='stacked' step can run as the
+    single-pass ``gossip_adam_mix`` kernel: a static shift-invariant
+    topology whose fused degree fits VMEM, with no payload buffers in
+    flight (staleness/overlap route the mix through StaleBufs)."""
+    from repro.kernels.gossip import MAX_GOSSIP_ADAM_DEGREE
+
+    if isinstance(topo, TopologySchedule):
+        return False
+    if cfg.comm != "stacked" or cfg.mixing == "dense":
+        return False
+    if cfg.staleness is not None or cfg.overlap:
+        return False
+    if topo.K == 1 or not topo.offsets:
+        return False
+    if len(topo.offsets) > MAX_GOSSIP_ADAM_DEGREE:
+        return False
+    return all(isinstance(s, (int, np.integer, GridShift))
+               for s in topo.offsets)
+
+
+def _step_packed_fused(state: PackedDAdamState, grads: Any,
+                       topo: Topology, cfg: DAdamConfig
+                       ) -> PackedDAdamState:
+    """Comm-step fast path: Adam half-step AND gossip mix in one VMEM
+    pass over the resident buffers (``kernels.gossip.gossip_adam_mix``) —
+    the half-stepped parameter stack never round-trips HBM. Bit-for-bit
+    the two-pass (fused_adam → gossip_mix) sequence; non-comm steps under
+    period > 1 run the plain fused_adam branch of the same cond."""
+    from repro.kernels import ops
+
+    gbuf = grads_buffer(grads, state.spec, state.buf.dtype,
+                        like_shape=state.buf.shape)
+    count = state.count + 1
+    kw = dict(eta=cfg.eta, beta1=cfg.beta1, beta2=cfg.beta2, tau=cfg.tau,
+              weight_decay=cfg.weight_decay)
+
+    def fused(op):
+        p, m, v = op
+        return ops.gossip_adam_mix(p, gbuf, m, v, topo.offsets,
+                                   topo.offset_weights, topo.self_weight,
+                                   **kw)
+
+    def plain(op):
+        p, m, v = op
+        return ops.fused_adam(p, gbuf, m, v, **kw)
+
+    op = (state.buf, state.m, state.v)
+    if cfg.period == 1:
+        po, mo, vo = fused(op)
+    else:
+        do_comm = (count % cfg.period) == 0
+        po, mo, vo = jax.lax.cond(do_comm, fused, plain, op)
+    return PackedDAdamState(po, mo, vo, count, state.spec, state.spec_m,
+                            state.stale)
+
+
 def _step_packed(state: PackedDAdamState, grads: Any,
                  topo: "Topology | TopologySchedule",
                  cfg: DAdamConfig) -> PackedDAdamState:
+    if _gossip_adam_eligible(topo, cfg):
+        return _step_packed_fused(state, grads, topo, cfg)
     po, mo, vo, count = _fused_local_packed(state, grads, cfg)
     r = _round_index(count, cfg.period)
 

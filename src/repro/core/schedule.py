@@ -195,9 +195,39 @@ _SCHEDULES = {
 
 
 def make_schedule(spec: str, K: int, **kw) -> TopologySchedule:
-    """Build a schedule from a string spec: a named family
-    (``one-peer-exp``, ``rand-ring`` — optionally ``rand-ring:N`` for N
-    entries) or any static-zoo topology name (wrapped single-entry)."""
+    """Build a time-varying topology schedule from a string spec.
+
+    Gossip round r uses entry ``r % len(entries)``; the optimizer
+    dispatches per-round graphs with ``lax.switch`` and sizes payload
+    buffers to the schedule's union edge set.
+
+    Args:
+      spec: a named family — ``"one-peer-exp"`` /
+        ``"one-peer-exponential"`` (log2(K) one-peer rounds) or
+        ``"rand-ring"`` (optionally ``"rand-ring:N"`` for N randomized
+        ring permutations) — or any static-zoo topology name, which
+        wraps as a single-entry (constant) schedule.
+      K: number of workers.
+      **kw: forwarded to the family constructor (e.g. ``seed=`` for
+        ``rand-ring``; an explicit ``n_entries=`` loses to a ``:N``
+        suffix in the spec).
+
+    Returns:
+      A :class:`TopologySchedule` whose every entry is a zoo-grade
+      :class:`Topology` (doubly stochastic, offsets == weights).
+
+    Raises:
+      KeyError: the spec names neither a family nor a zoo topology.
+
+    Example:
+      >>> sched = make_schedule("one-peer-exp", 8)
+      >>> len(sched.entries), sched.K
+      (3, 8)
+      >>> len(make_schedule("rand-ring:4", 8).entries)
+      4
+      >>> make_schedule("ring", 8).entries[0].name
+      'ring'
+    """
     name, _, arg = spec.partition(":")
     name = name.replace("_", "-")
     if name in _SCHEDULES:

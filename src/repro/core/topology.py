@@ -256,6 +256,33 @@ _REGISTRY = {
 
 
 def make_topology(name: str, K: int, **kw) -> Topology:
+    """Build a static gossip graph from the zoo by name.
+
+    Args:
+      name: ``"ring"``, ``"torus"``, ``"exponential"``, or
+        ``"fully_connected"``. ``"torus"`` picks the most-square
+        ``rows x cols`` factorization of K and falls back to ``ring(K)``
+        (with a ``RuntimeWarning``) when K only factors as ``1 x K``.
+      K: number of workers.
+      **kw: forwarded to the zoo constructor (e.g. ``ring(K, weight=...)``).
+
+    Returns:
+      A :class:`Topology` — symmetric doubly-stochastic ``weights``
+      plus the uniform-weight permutation ``offsets`` the roll/ppermute
+      gossip lowers through (``offsets_matrix(topo) == topo.weights``).
+
+    Raises:
+      KeyError: unknown topology name.
+
+    Example:
+      >>> topo = make_topology("ring", 8)
+      >>> topo.K, sorted(topo.offsets)     # +-1 ring shifts (mod K)
+      (8, [1, 7])
+      >>> float(topo.weights.sum(axis=1).max())   # doubly stochastic
+      1.0
+      >>> 0.0 < topo.spectral_gap <= 1.0
+      True
+    """
     if name == "torus":
         r = int(np.sqrt(K))
         while K % r:

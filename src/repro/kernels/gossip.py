@@ -29,6 +29,18 @@ no per-step pack/unpack, no per-leaf tree_map launches:
     (hat_s[k] - hat_self[k])  (Alg. 2 line 8) — a (deg + 2)-operand
     elementwise pass, fused into a single VMEM visit per block.
 
+``gossip_adam_mix``
+    D-Adam's whole communication step — fused_adam THEN gossip_mix — as a
+    single VMEM pass: each grid cell recomputes the Adam half-step for
+    its own block AND each neighbor block straight from (p, g, m, v) and
+    mixes them in registers, so the half-stepped parameter stack is never
+    written to (or re-read from) HBM at all. The half-step result is
+    rounded through the parameter dtype before mixing, which keeps the
+    output bit-for-bit identical to the stored-then-reloaded two-pass
+    sequence. The Adam math for neighbor blocks is redundant compute
+    ((deg + 1)× per block), but the kernel is memory-bound: trading VPU
+    flops for one full HBM round-trip of the parameter stack wins.
+
 Hyperparameters (offsets, weights, gamma) are compile-time constants: the
 optimizer jits one step per config, matching fused_adam / sign_compress.
 Zero-filled padding rows mix to zero under both kernels (all-zero inputs
@@ -50,6 +62,11 @@ from repro.kernels.pack import BLOCK_ROWS, LANE  # shared tile quantum
 # 128 KiB (plus pipeline double-buffering) stay comfortably inside it.
 # Denser graphs fall back to the XLA einsum path in the dispatcher.
 MAX_FUSED_DEGREE = 32
+
+# gossip_adam_mix reads FOUR operands (p, g, m, v) per worker block —
+# 4 * (deg + 1) inputs + 3 outputs of 128 KiB, double-buffered — so its
+# degree cap is tighter; denser graphs take the two-pass sequence.
+MAX_GOSSIP_ADAM_DEGREE = 8
 
 
 def _check_buf(x: jax.Array, block_rows: int) -> Tuple[int, int]:
@@ -149,6 +166,107 @@ def payload_mix(x: jax.Array, payloads: Sequence[jax.Array],
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x, *payloads)
+
+
+def _gossip_adam_kernel(*refs, self_weight: float,
+                        weights: Tuple[float, ...], eta: float,
+                        beta1: float, beta2: float, tau: float,
+                        weight_decay: float):
+    ins, (po_ref, mo_ref, vo_ref) = refs[:-3], refs[-3:]
+
+    def half_step(p_ref, g_ref, m_ref, v_ref):
+        # identical ops, order and constants as fused_adam._adam_kernel —
+        # that is what pins the fused path bitwise to the two-pass one
+        g = g_ref[...].astype(jnp.float32)
+        p = p_ref[...]
+        if weight_decay:
+            g = g + weight_decay * p.astype(jnp.float32)
+        m = beta1 * m_ref[...].astype(jnp.float32) + (1.0 - beta1) * g
+        v = beta2 * v_ref[...].astype(jnp.float32) + (1.0 - beta2) * g * g
+        step = eta * m * jax.lax.rsqrt(v + 1e-30) \
+            if tau == 0.0 else eta * m / (jnp.sqrt(v) + tau)
+        # round through the parameter dtype BEFORE mixing: the two-pass
+        # sequence stores the half-step and reloads it for the mix
+        po = (p.astype(jnp.float32) - step).astype(po_ref.dtype)
+        return po, m, v
+
+    po_self, m_self, v_self = half_step(*ins[0:4])
+    acc = self_weight * po_self.astype(jnp.float32)
+    for j, w in enumerate(weights):
+        po_nbr, _, _ = half_step(*ins[4 * (j + 1):4 * (j + 2)])
+        acc = acc + w * po_nbr.astype(jnp.float32)
+    po_ref[...] = acc.astype(po_ref.dtype)
+    mo_ref[...] = m_self.astype(mo_ref.dtype)
+    vo_ref[...] = v_self.astype(vo_ref.dtype)
+
+
+def gossip_adam_mix(p: jax.Array, g: jax.Array, m: jax.Array,
+                    v: jax.Array, offsets: Sequence[int],
+                    offset_weights: Sequence[float], self_weight: float, *,
+                    eta: float, beta1: float = 0.9, beta2: float = 0.999,
+                    tau: float = 1e-6, weight_decay: float = 0.0,
+                    block_rows: int = BLOCK_ROWS, interpret: bool = False
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused Adam half-step + shift-invariant gossip over resident packed
+    buffers: ``fused_adam`` followed by ``gossip_mix``, in ONE VMEM pass.
+
+    All four operands are stacked (K, rows, LANE) buffers; returns
+    (mixed params, m, v). Each output block's neighbor half-steps are
+    recomputed in VMEM from the neighbor's (p, g, m, v) blocks via
+    shifted BlockSpec index maps (same shift arithmetic as
+    ``gossip_mix``), with the half-step rounded through the parameter
+    dtype before the f32 mix — bit-for-bit the two-pass result.
+    """
+    K, rows = _check_buf(p, block_rows)
+    for name, b in (("g", g), ("m", m), ("v", v)):
+        if b.shape != p.shape:
+            raise ValueError(f"{name} shape {b.shape} != p {p.shape}")
+    offsets = tuple(s if isinstance(s, GridShift) else int(s)
+                    for s in offsets)
+    weights = tuple(float(w) for w in offset_weights)
+    if len(offsets) != len(weights):
+        raise ValueError("offsets and offset_weights must align")
+    if not offsets:
+        raise ValueError("gossip_adam_mix needs at least one offset; "
+                         "offset-free topologies have no mix to fuse "
+                         "(use fused_adam)")
+    if len(offsets) > MAX_GOSSIP_ADAM_DEGREE:
+        raise ValueError(
+            f"degree {len(offsets)} > MAX_GOSSIP_ADAM_DEGREE="
+            f"{MAX_GOSSIP_ADAM_DEGREE}; the dispatcher should take the "
+            "two-pass sequence for denser graphs")
+    for s in offsets:
+        if isinstance(s, GridShift) and s.rows * s.cols != K:
+            raise ValueError(f"GridShift {s} does not cover K={K}")
+
+    def spec_for(shift) -> pl.BlockSpec:
+        if isinstance(shift, GridShift):
+            return pl.BlockSpec((1, block_rows, LANE),
+                                lambda k, i, s=shift: (s.src(k), i, 0))
+        return pl.BlockSpec((1, block_rows, LANE),
+                            lambda k, i, s=shift: ((k + s) % K, i, 0))
+
+    kernel = functools.partial(
+        _gossip_adam_kernel, self_weight=float(self_weight),
+        weights=weights, eta=float(eta), beta1=float(beta1),
+        beta2=float(beta2), tau=float(tau),
+        weight_decay=float(weight_decay))
+    in_specs, operands = [], []
+    for s in (0,) + offsets:
+        in_specs.extend([spec_for(s)] * 4)
+        operands.extend([p, g, m, v])
+    return pl.pallas_call(
+        kernel,
+        grid=(K, rows // block_rows),
+        in_specs=in_specs,
+        out_specs=[spec_for(0)] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(*operands)
 
 
 def _consensus_kernel(*refs, gamma: float, weights: Tuple[float, ...]):

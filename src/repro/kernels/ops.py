@@ -52,6 +52,18 @@ def gossip_mix(x, offsets, offset_weights, self_weight, *,
                               interpret=_interpret(interpret), **kw)
 
 
+def gossip_adam_mix(p, g, m, v, offsets, offset_weights, self_weight, *,
+                    eta, beta1=0.9, beta2=0.999, tau=1e-6,
+                    weight_decay=0.0, block_rows: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    kw = {} if block_rows is None else {"block_rows": block_rows}
+    return _gossip.gossip_adam_mix(p, g, m, v, offsets, offset_weights,
+                                   self_weight, eta=eta, beta1=beta1,
+                                   beta2=beta2, tau=tau,
+                                   weight_decay=weight_decay,
+                                   interpret=_interpret(interpret), **kw)
+
+
 def payload_mix(x, payloads, offset_weights, self_weight, *,
                 block_rows: Optional[int] = None,
                 interpret: Optional[bool] = None):

@@ -1,11 +1,25 @@
 """Launchers: production mesh, multi-pod dry-run, training/serving drivers.
 
+Mesh exports resolve lazily (PEP 562) so ``repro.launch.env`` — which
+must configure ``XLA_FLAGS`` BEFORE jax initializes — can be imported
+without this package pulling in jax first.
+
 NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
 fresh process (python -m repro.launch.dryrun).
 """
-from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                               make_host_mesh, make_production_mesh,
-                               make_worker_mesh, n_chips)
+_MESH_EXPORTS = ("make_production_mesh", "make_host_mesh",
+                 "make_worker_mesh", "n_chips",
+                 "PEAK_FLOPS", "HBM_BW", "ICI_BW")
 
-__all__ = ["make_production_mesh", "make_host_mesh", "make_worker_mesh",
-           "n_chips", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+__all__ = list(_MESH_EXPORTS) + ["env"]
+
+
+def __getattr__(name):
+    import importlib
+
+    if name in _MESH_EXPORTS:
+        mesh = importlib.import_module("repro.launch.mesh")
+        return getattr(mesh, name)
+    if name == "env":
+        return importlib.import_module("repro.launch.env")
+    raise AttributeError(f"module 'repro.launch' has no attribute {name!r}")

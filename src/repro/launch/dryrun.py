@@ -1,10 +1,14 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch import env as _env
 
-# NOTE: the two lines above MUST run before any jax-importing module —
-# jax locks the device count at first init. Do not reorder.
+_env.setup(512)
+
+# NOTE: the lines above MUST run before any jax-importing module — jax
+# locks the device count at first init. Do not reorder. A pre-set
+# XLA_FLAGS host-device count wins (repro.launch.env appends, never
+# clobbers); without one the multi-pod dry-run gets 512 virtual devices.
 
 import argparse
+import os
 import dataclasses
 import json
 import time

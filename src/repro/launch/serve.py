@@ -12,6 +12,11 @@ from __future__ import annotations
 import argparse
 import time
 
+if __name__ == "__main__":
+    # env flags (device count, async collectives) BEFORE jax initializes
+    from repro.launch import env as _env
+    _env.setup()
+
 import jax
 import jax.numpy as jnp
 

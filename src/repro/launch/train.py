@@ -12,6 +12,12 @@ from __future__ import annotations
 import argparse
 import time
 
+if __name__ == "__main__":
+    # host-device count + async-collective XLA flags must land BEFORE
+    # jax initializes; repro.launch.env appends to any pre-set XLA_FLAGS
+    from repro.launch import env as _env
+    _env.setup()
+
 import jax
 import jax.numpy as jnp
 
@@ -73,6 +79,13 @@ def main() -> None:
                     help="simulated straggler probability per edge per "
                          "round (requires --staleness >= 1)")
     ap.add_argument("--straggler-seed", type=int, default=0)
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap gossip with the local Adam steps: round "
+                         "r's exchange is issued eagerly and folded in at "
+                         "round r+1 (a delay-1 wire schedule, i.e. "
+                         "staleness tau=1 on the wire with every edge "
+                         "exactly one round late); mutually exclusive "
+                         "with --staleness")
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "pallas"],
                     help="optimizer execution backend (pallas = fused "
@@ -128,7 +141,8 @@ def main() -> None:
                          backend=args.backend, comm=args.comm, mesh=mesh,
                          staleness=args.staleness,
                          straggler_rate=args.straggler_rate,
-                         straggler_seed=args.straggler_seed)
+                         straggler_seed=args.straggler_seed,
+                         overlap=args.overlap)
     # 2D mesh: thread the head-aware mode='axis' sharding rules into the
     # loss (grad pipeline packed-GSPMD path) so matmul operands stay
     # P(..., 'model') instead of replicating whole per-worker param sets
@@ -144,7 +158,8 @@ def main() -> None:
     print(f"[train] {args.arch} ({'full' if args.full else 'reduced'}) "
           f"N={n_params/1e6:.1f}M x {args.workers} workers "
           f"opt={args.optimizer} p={args.period} "
-          f"topo={args.topology} backend={args.backend} comm={args.comm}")
+          f"topo={args.topology} backend={args.backend} comm={args.comm}"
+          + (" overlap" if args.overlap else ""))
     if args.comm == "axis":
         print(f"[train] worker mesh: {tuple(mesh.shape.items())} — state "
               f"sharded one worker per slot; gossip = ppermute over "

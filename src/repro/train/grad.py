@@ -278,7 +278,42 @@ def make_grad_pipeline(loss: Callable[[PyTree, PyTree], jax.Array],
     else takes the reference vmap path. ``plan`` (a
     ``launch.shardings.ShardingPlan``) only affects the packed-GSPMD 2D
     fallback: the plan's ``param_pspec`` rules are applied to the unpacked
-    leaves as sharding constraints."""
+    leaves as sharding constraints.
+
+    Args:
+      loss: per-worker scalar loss ``(params, batch) -> float`` (no K
+        dim on either argument; the pipeline adds the worker dim).
+      opt: a ``DecentralizedOptimizer``; its config decides the mode.
+      microbatch: gradient-accumulation chunks per step (>= 1).
+      sharded_loss: ``(local_block, batch) -> scalar`` evaluated inside
+        the shard_map on each device's ``(1, rows/M, 128)`` row shard;
+        selects the ``'sharded-packed'`` mode on a 2D mesh.
+      plan: sharding constraints for the 2D GSPMD fallback only.
+
+    Returns:
+      A :class:`GradPipeline` — ``mode`` in ``('reference', 'packed',
+      'sharded-packed')`` and ``value_and_grad(state, batch) ->
+      (losses (K,), grads)`` with ``grads`` in the optimizer's native
+      form (stacked pytree / packed buffer / sharded packed buffer).
+
+    Raises:
+      ValueError: ``microbatch < 1``, or ``sharded_loss`` given without
+        a 2D comm='axis' optimizer to host it.
+
+    Example:
+      >>> import jax.numpy as jnp
+      >>> from repro.core import make_optimizer
+      >>> from repro.train.grad import make_grad_pipeline
+      >>> opt = make_optimizer("d-adam", K=2, eta=1e-2)
+      >>> pipe = make_grad_pipeline(
+      ...     lambda p, b: jnp.mean((p["w"] - b) ** 2), opt)
+      >>> pipe.mode
+      'reference'
+      >>> losses, grads = pipe.value_and_grad(
+      ...     opt.init({"w": jnp.zeros((2, 3))}), jnp.ones((2, 3)))
+      >>> losses.shape, grads["w"].shape
+      ((2,), (2, 3))
+    """
     cfg = opt.cfg
     packed = getattr(cfg, "backend", "reference") == "pallas"
     M = int(getattr(cfg, "model_parallel", 1))

@@ -72,6 +72,38 @@ class DecentralizedTrainer:
     pass ``plan`` (``launch.shardings.make_plan(mode='axis')``) to thread
     its head-aware ``param_pspec`` rules into that loss as sharding
     constraints.
+
+    Args (constructor):
+      loss_fn: per-worker scalar loss ``(params, batch) -> float``;
+        sees ONE worker's params and batch (no K dim) — the pipeline
+        vmaps / shard_maps it.
+      opt: a ``DecentralizedOptimizer`` from ``make_optimizer``.
+      microbatch: > 1 turns on gradient accumulation (the batch's
+        per-worker dim is split into this many chunks).
+      sharded_loss: model-parallel loss over local row shards (2D mesh
+        only; see ``make_grad_pipeline``).
+      plan: ``launch.shardings.ShardingPlan`` for the 2D GSPMD fallback.
+      recompile_limit: arm the JXL003 recompile gate — ``fit`` raises
+        once the jitted step has compiled for more than this many
+        distinct abstract signatures (elastic resizes excluded).
+
+    Example:
+      >>> import jax.numpy as jnp
+      >>> from repro.core import make_optimizer
+      >>> from repro.train.loop import DecentralizedTrainer
+      >>> def loss(p, b):                    # ONE worker's view
+      ...     return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+      >>> opt = make_optimizer("d-adam", K=2, eta=1e-2)
+      >>> tr = DecentralizedTrainer(loss, opt)
+      >>> state = tr.init({"w": jnp.zeros((3, 1))})  # stacked to K inside
+      >>> def batches():
+      ...     while True:                    # leading K dim on each leaf
+      ...         yield {"x": jnp.ones((2, 4, 3)), "y": jnp.ones((2, 4, 1))}
+      >>> state, log = tr.fit(state, batches(), steps=3)
+      >>> opt.params_of(state)["w"].shape
+      (2, 3, 1)
+      >>> len(log.loss)                      # logged on the final step
+      1
     """
 
     def __init__(self, loss_fn: Callable[[PyTree, PyTree], jax.Array],

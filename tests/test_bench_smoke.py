@@ -30,14 +30,20 @@ REQUIRED_KEYS = [
     "pallas_resident_collectives",
     "pallas_axis_collectives",
     "pallas_axis2d_collectives",
+    # delay-1 overlap schedule on the same meshes, paired with the eager
+    # numbers above so overlap regressions (latency or wire bytes) show
+    "pallas_axis_overlap_us_per_step",
+    "pallas_axis_overlap_collectives",
+    "pallas_axis2d_overlap_us_per_step",
+    "pallas_axis2d_overlap_collectives",
 ]
 
-COLLECTIVE_FIELDS = {"count", "bytes", "max_bytes"}
+COLLECTIVE_FIELDS = {"count", "bytes", "max_bytes", "async_pairs"}
 
 
 def check_collectives(summary):
     """Schema of one variant's collective summary: every kind carries
-    count/bytes/max_bytes ints."""
+    count/bytes/max_bytes/async_pairs ints."""
     assert set(summary) >= {"all-gather", "all-reduce", "reduce-scatter",
                             "all-to-all", "collective-permute"}
     for kind, v in summary.items():
@@ -69,21 +75,30 @@ def test_fused_step_smoke(tmp_path, capsys):
         if jax.device_count() >= 2:
             assert rec["pallas_axis_us_per_step"] > 0
             check_collectives(rec["pallas_axis_collectives"])
+            assert rec["pallas_axis_overlap_us_per_step"] > 0
+            check_collectives(rec["pallas_axis_overlap_collectives"])
         else:
             assert rec["pallas_axis_skipped"]
             assert rec["pallas_axis_collectives"] is None
+            assert rec["pallas_axis_overlap_skipped"]
+            assert rec["pallas_axis_overlap_collectives"] is None
         if jax.device_count() >= 4:
             assert rec["pallas_axis2d_us_per_step"] > 0
             check_collectives(rec["pallas_axis2d_collectives"])
             # the 2D-step regression the CI summary surfaces per push:
-            # gossip crosses only 'worker' (permutes), never a gather
-            assert rec["pallas_axis2d_collectives"]["all-gather"][
-                "count"] == 0
-            assert rec["pallas_axis2d_collectives"]["collective-permute"][
-                "count"] > 0
+            # gossip crosses only 'worker' (permutes), never a gather —
+            # and the overlap schedule must not reintroduce one either
+            for field in ("pallas_axis2d_collectives",
+                          "pallas_axis2d_overlap_collectives"):
+                assert rec[field]["all-gather"]["count"] == 0, field
+                assert rec[field]["collective-permute"]["count"] > 0, field
+            assert rec["pallas_axis2d_overlap_us_per_step"] > 0
+            check_collectives(rec["pallas_axis2d_overlap_collectives"])
         else:
             assert rec["pallas_axis2d_skipped"]
             assert rec["pallas_axis2d_collectives"] is None
+            assert rec["pallas_axis2d_overlap_skipped"]
+            assert rec["pallas_axis2d_overlap_collectives"] is None
     cd = next(r for r in record["records"] if r["kind"] == "cd-adam")
     assert cd["wire_bytes_per_round"] > 0
 
