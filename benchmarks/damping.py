@@ -1,0 +1,171 @@
+"""Fixed-batch vs adaptively damped batch: steps and gradient evaluations
+to a target loss.
+
+The damping claim (ROADMAP 'adaptive batch damping', AdaDamp/PadaDamp/
+GeoDamp style): growing the effective batch as the loss falls reaches the
+same loss in FEWER gradient evaluations than training at the final batch
+size from step 0 — early steps don't need the variance reduction they
+would be paying for. The gradient-evaluation count is the serverless
+billing unit (SMLT's resource-scaling argument), tracked exactly by
+``TrainLog.grad_evals``.
+
+Two tasks, one JSON record:
+
+* ``ctr`` — DeepFM on the synthetic CTR task (the paper's main workload),
+  non-IID worker shards, per-worker damping signals.
+* ``lm``  — the reduced llama3.2-1b config on synthetic LM batches
+  (registry smoke size), global damping signal.
+
+Per task, the FIXED baseline runs ``microbatch=max_chunks`` (all chunks
+live every step — bitwise the damped pipeline at its ceiling) and sets
+the target loss; the DAMPED run (AdaDamp) gets a 3x step budget to reach
+it and reports ``steps_to_target`` / ``grad_evals_to_target``. The
+damped trainer is armed with ``recompile_limit=1``: every damping level
+must reuse ONE compiled step (the record's ``compiles`` field pins it).
+
+Emits the usual CSV rows plus one ``JSON {...}`` stdout line and an
+optional ``--out`` artifact for CI (schema pinned by
+``tests/test_bench_smoke.py`` and the committed ``BENCH_<pr>.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+if __name__ == "__main__":
+    # K=4 workers; force matching host devices BEFORE jax initializes,
+    # appending to (never clobbering) a pre-set XLA_FLAGS
+    from repro.launch import env as _env
+    _env.setup(4)
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import TASK, emit
+from repro.core import make_optimizer
+from repro.data import ctr_batch_stacked, lm_batch
+from repro.models.deepfm import deepfm_loss, init_deepfm
+from repro.train import DampingConfig, DecentralizedTrainer
+
+K = 4
+CTR_CHUNKS = 8     # per-worker batch 32 -> chunks of 4 samples
+LM_CHUNKS = 4      # per-worker batch 8  -> chunks of 2 sequences
+
+
+def ctr_iter(seed: int = 11, batch: int = 32, skew: float = 0.5):
+    key = jax.random.PRNGKey(seed)
+    t = 0
+    while True:
+        yield ctr_batch_stacked(TASK, jax.random.fold_in(key, t), K, batch,
+                                skew=skew)
+        t += 1
+
+
+def make_ctr_trainer(damping: "DampingConfig | None", **trainer_kw):
+    opt = make_optimizer("d-adam", K=K, eta=1e-3, period=4)
+    trainer = DecentralizedTrainer(lambda p, b: deepfm_loss(p, b), opt,
+                                   damping=damping, **trainer_kw)
+    params = init_deepfm(jax.random.PRNGKey(0), TASK.n_features,
+                         TASK.n_fields, hidden=(64, 64))
+    return trainer, trainer.init(params)
+
+
+def lm_setup():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    arch = get_reduced("llama3.2-1b")
+    cfg = arch.model
+    api = build_model(cfg)
+
+    def it(seed: int = 13, batch: int = 8, seq: int = 16):
+        key = jax.random.PRNGKey(seed)
+        t = 0
+        while True:
+            kt = jax.random.fold_in(key, t)
+            yield {"tokens": jnp.stack([
+                lm_batch(kt, batch, seq, cfg.vocab_size, k, K, 0.5)
+                for k in range(K)])}
+            t += 1
+
+    def make_trainer(damping, **trainer_kw):
+        opt = make_optimizer("d-adam", K=K, eta=1e-3, period=4)
+        trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt,
+                                       damping=damping, **trainer_kw)
+        return trainer, trainer.init(api.init(jax.random.PRNGKey(0)))
+
+    return it, make_trainer
+
+
+def run_to_target(trainer, state, it, target: float, max_steps: int):
+    """Step until the logged loss reaches ``target`` (or the budget runs
+    out), CONTINUING one TrainLog across 1-step fit windows — the
+    streaming use of the cumulative log counters."""
+    log = None
+    for _ in range(max_steps):
+        state, log = trainer.fit(state, it, 1, log_every=1, log=log)
+        if log.loss[-1] <= target:
+            break
+    return state, log
+
+
+def run_task(task: str, make_trainer, make_iter, max_chunks: int,
+             steps: int, per_worker: bool) -> dict:
+    # fixed baseline: every chunk live from step 0 (the damped pipeline
+    # at its ceiling), sets the target
+    trainer, state = make_trainer(None, microbatch=max_chunks)
+    state, log = trainer.fit(state, make_iter(), steps, log_every=1)
+    target = float(min(log.loss))
+    fixed = {"steps": int(log.steps_total),
+             "grad_evals": int(log.grad_evals_total),
+             "final_loss": float(log.loss[-1])}
+
+    damping = DampingConfig(policy="adadamp", max_chunks=max_chunks,
+                            ema=0.7, per_worker=per_worker)
+    dtrainer, dstate = make_trainer(damping, recompile_limit=1)
+    dstate, dlog = run_to_target(dtrainer, dstate, make_iter(), target,
+                                 max_steps=3 * steps)
+    reached = bool(dlog.loss[-1] <= target)
+    damped = {"steps": int(dlog.steps_total),
+              "grad_evals": int(dlog.grad_evals_total),
+              "final_loss": float(dlog.loss[-1]),
+              "reached": reached,
+              "compiles": int(dtrainer._step._cache_size())}
+    emit(f"damping/{task}_target_loss", 0.0, f"{target:.4f}")
+    emit(f"damping/{task}_fixed_grad_evals", 0.0, fixed["grad_evals"])
+    emit(f"damping/{task}_damped_grad_evals", 0.0, damped["grad_evals"])
+    emit(f"damping/{task}_damped_compiles", 0.0, damped["compiles"])
+    return {"task": task, "policy": "adadamp", "max_chunks": max_chunks,
+            "per_worker": per_worker, "target_loss": target,
+            "fixed": fixed, "damped": damped}
+
+
+def main(steps: int = 60, lm_steps: int = 30, out: str = "") -> dict:
+    records = [run_task("ctr", make_ctr_trainer, ctr_iter, CTR_CHUNKS,
+                        steps, per_worker=True)]
+    lm_iter, make_lm_trainer = lm_setup()
+    records.append(run_task("lm", make_lm_trainer, lm_iter, LM_CHUNKS,
+                            lm_steps, per_worker=False))
+
+    record = {
+        "benchmark": "damping",
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "workers": K,
+        "steps": steps,
+        "records": records,
+    }
+    print("JSON " + json.dumps(record), flush=True)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--lm-steps", type=int, default=30)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    main(steps=args.steps, lm_steps=args.lm_steps, out=args.out)

@@ -77,7 +77,7 @@ def _batch(K):
 class SweepConfig:
     backend: str            # 'reference' | 'packed' | 'axis' | 'axis2d'
     kind: str               # 'd-adam' | 'cd-adam'
-    variant: str            # 'plain' | 'schedule' | 'stale' | 'overlap'
+    variant: str    # 'plain' | 'schedule' | 'stale' | 'overlap' | 'damping'
     K: int = 4
     M: int = 1
 
@@ -96,7 +96,7 @@ class SweepConfig:
 
 BACKENDS = ("reference", "packed", "axis", "axis2d")
 KINDS = ("d-adam", "cd-adam")
-VARIANTS = ("plain", "schedule", "stale", "overlap")
+VARIANTS = ("plain", "schedule", "stale", "overlap", "damping")
 
 
 def sweep_configs(backends: Sequence[str] = BACKENDS,
@@ -134,6 +134,16 @@ def _build(cfg: SweepConfig):
         # on every backend incl. the 2D mesh
         kw["overlap"] = True
     extra: Dict[str, Any] = {}
+    if cfg.variant == "damping":
+        # adaptive batch damping: the masked accumulation scan + the
+        # traced per-worker chunk counts must satisfy the SAME spec as
+        # the plain config on every backend — in particular zero
+        # all-gathers in the sharded 2D mode, where the counts ride into
+        # the shard_map as a P('worker') batch leaf
+        from repro.train import DampingConfig
+
+        extra["damping"] = DampingConfig(policy="adadamp", max_chunks=2,
+                                         per_worker=True)
     if cfg.backend in ("packed", "axis", "axis2d"):
         kw["backend"] = "pallas"
     if cfg.backend in ("axis", "axis2d"):
@@ -205,7 +215,18 @@ def check_config(cfg: SweepConfig) -> ConfigResult:
     # rules stay off: non-AD optimizer code psums compression scales
     # legitimately); raw-collective rules on the sharded-loss probe.
     step = tr.pipeline.value_and_grad
-    res.lint += lint_fn(lambda s, b: step(s, b), state, batch,
+    if cfg.variant == "damping":
+        # the damped pipeline takes the traced per-worker chunk counts as
+        # a third argument; lint and lower with the trainer's live state
+        from repro.train.damping import chunks_of
+
+        n = chunks_of(tr.damp_state, tr._damping, opt.K)
+        vag = lambda s, b: step(s, b, n)  # noqa: E731
+        step_args: Tuple = (state, tr.damp_state, batch)
+    else:
+        vag = lambda s, b: step(s, b)  # noqa: E731
+        step_args = (state, batch)
+    res.lint += lint_fn(vag, state, batch,
                         check_raw=False,
                         gossip_axes=(opt.cfg.axis_name,),
                         reduce_axes=(getattr(opt.cfg, "model_axis_name",
@@ -214,11 +235,24 @@ def check_config(cfg: SweepConfig) -> ConfigResult:
         from repro.train.grad import sharded_loss_probe
 
         probe = sharded_loss_probe(_sharded_loss, opt)
-        res.lint += lint_fn(probe, state, batch)
-        res.lint += lint_grad_psums(probe, step, (state, batch))
+        if cfg.variant == "damping":
+            # the damped pipeline evaluates the loss per CHUNK (B /
+            # max_chunks rows), so the probe must see chunk-shaped
+            # activations for the psum shape accounting to line up
+            C = tr._damping.max_chunks
+
+            def probe_c(s, b):
+                return probe(s, jax.tree_util.tree_map(
+                    lambda x: x[:, :x.shape[1] // C], b))
+
+            res.lint += lint_fn(probe_c, state, batch)
+            res.lint += lint_grad_psums(probe_c, vag, (state, batch))
+        else:
+            res.lint += lint_fn(probe, state, batch)
+            res.lint += lint_grad_psums(probe, vag, (state, batch))
 
     # pass 2: HLO invariants on the compiled step
-    hlo = tr._step.lower(state, batch).compile().as_text()
+    hlo = tr._step.lower(*step_args).compile().as_text()
     res.report = evaluate_hlo(hlo, spec_for(cfg, state))
     return res
 

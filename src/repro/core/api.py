@@ -44,7 +44,7 @@ instead). Requires ``backend='pallas'``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 from jax.experimental.shard_map import shard_map
@@ -216,16 +216,43 @@ class DecentralizedOptimizer:
     # each device's row-shard block inside the 2D shard_map (the grad
     # pipeline's sharded-packed mode; see train/grad.py)
     sharded_value_and_grad: Any = None
+    # re-run make_optimizer with this optimizer's full kwargs plus
+    # overrides (rebuild(eta=...) is the damping lr-decay hook; None on
+    # hand-assembled optimizers that bypassed the factory)
+    rebuild: Any = None
 
     @property
     def K(self) -> int:
         return self.topo.K
 
-    def comm_bytes_per_round(self, params: PyTree) -> int:
-        """Bytes each worker sends per communication round (per the paper's
-        'communication cost (MB)' x-axes)."""
+    def _bytes_for_degree(self, deg, per_worker: PyTree):
+        """Wire bytes one worker sends in a round of gossip degree
+        ``deg`` (the payload model ``comm_bytes_per_round`` uses)."""
         from repro.core.compression import tree_dense_bytes, tree_wire_bytes
 
+        if self.compressor is None:
+            return deg * tree_dense_bytes(per_worker)
+        if getattr(self.cfg, "scales", "leaf") == "worker":
+            # whole-buffer compression: int8 sign payload per element plus
+            # ONE f32 scale per worker (instead of one per leaf)
+            n = sum(x.size for x in jax.tree_util.tree_leaves(per_worker))
+            return deg * (n + 4)
+        return deg * tree_wire_bytes(self.compressor, per_worker)
+
+    def _union_exchange(self) -> bool:
+        """Whether a schedule exchanges over the UNION edge set every
+        round: per-edge-state consumers (CD-Adam payloads, staleness /
+        overlap delay buffers) must keep every edge's state aligned
+        across the cycle."""
+        return (self.compressor is not None
+                or (getattr(self.cfg, "staleness", None) or 0) > 0
+                or bool(getattr(self.cfg, "overlap", False)))
+
+    def comm_bytes_per_round(self, params: PyTree) -> int:
+        """Bytes each worker sends per communication round (per the paper's
+        'communication cost (MB)' x-axes). For a ``TopologySchedule``
+        without per-edge state this is the CYCLE-AVERAGE; per-round
+        accounting is :meth:`comm_bytes_round_list`."""
         # strip the stacked worker dim for per-worker accounting
         per_worker = jax.tree_util.tree_map(lambda x: x[0], params)
         # Degree = the number of peers each worker actually exchanges with.
@@ -235,13 +262,7 @@ class DecentralizedOptimizer:
         # comes from the weight matrix's off-diagonal support.
         mixing = getattr(self.cfg, "mixing", "roll")
         if isinstance(self.topo, TopologySchedule):
-            # Per-edge-state consumers (CD-Adam payloads, staleness
-            # buffers) exchange over the union edge set EVERY comm round
-            # so the per-edge state stays aligned across the cycle; plain
-            # D-Adam gossip only touches the round's own entry, so its
-            # per-round wire cost is the cycle-average degree.
-            if (self.compressor is not None
-                    or (getattr(self.cfg, "staleness", None) or 0) > 0):
+            if self._union_exchange():
                 deg = len(self.topo.union_offsets())
             else:
                 deg = float(np.mean([len(e.offsets)
@@ -250,14 +271,28 @@ class DecentralizedOptimizer:
             deg = len(self.topo.offsets)
         else:
             deg = len(self.topo.neighbors_of(0))
-        if self.compressor is None:
-            return deg * tree_dense_bytes(per_worker)
-        if getattr(self.cfg, "scales", "leaf") == "worker":
-            # whole-buffer compression: int8 sign payload per element plus
-            # ONE f32 scale per worker (instead of one per leaf)
-            n = sum(x.size for x in jax.tree_util.tree_leaves(per_worker))
-            return deg * (n + 4)
-        return deg * tree_wire_bytes(self.compressor, per_worker)
+        return self._bytes_for_degree(deg, per_worker)
+
+    def comm_bytes_round_list(self, params: PyTree) -> "list":
+        """Per-round bytes across one schedule cycle: entry ``r % len``
+        is what a worker sends in communication round ``r``. Static
+        topologies return a single-entry list; schedules with per-edge
+        state exchange over the union edge set every round, so theirs is
+        uniform too. Plain D-Adam under a schedule gets the true
+        per-entry degree — the accounting ``TrainLog.comm_mb`` sums."""
+        per_worker = jax.tree_util.tree_map(lambda x: x[0], params)
+        if isinstance(self.topo, TopologySchedule):
+            if self._union_exchange():
+                deg = len(self.topo.union_offsets())
+                return [self._bytes_for_degree(deg, per_worker)]
+            return [self._bytes_for_degree(len(e.offsets), per_worker)
+                    for e in self.topo.entries]
+        mixing = getattr(self.cfg, "mixing", "roll")
+        if self.topo.offsets and mixing != "dense":
+            deg = len(self.topo.offsets)
+        else:
+            deg = len(self.topo.neighbors_of(0))
+        return [self._bytes_for_degree(deg, per_worker)]
 
 
 def resolve_topology(topology: "str | Topology | TopologySchedule",
@@ -377,6 +412,17 @@ def make_optimizer(
       >>> opt.params_of(state)["w"].shape
       (4, 8, 2)
     """
+    # capture the full factory call before any normalization, so
+    # opt.rebuild(**overrides) reproduces THIS optimizer with a few knobs
+    # turned (the damping lr-decay hook rebuilds with a smaller eta)
+    factory_kwargs: Dict[str, Any] = dict(
+        kind=kind, K=K, topology=topology, period=period, eta=eta,
+        beta1=beta1, beta2=beta2, tau=tau, weight_decay=weight_decay,
+        gamma=gamma, compressor=compressor, scales=scales, mixing=mixing,
+        moment_dtype=moment_dtype, backend=backend, comm=comm, mesh=mesh,
+        axis_name=axis_name, model_axis_name=model_axis_name,
+        staleness=staleness, straggler_rate=straggler_rate,
+        straggler_seed=straggler_seed, overlap=overlap, **comp_kw)
     topo = resolve_topology(topology, K)
     kind = kind.lower().replace("_", "-")
     if scales != "leaf" and kind not in ("cd-adam", "cdadam"):
@@ -479,4 +525,6 @@ def make_optimizer(
         opt = _with_axis_execution(opt, mesh, axis_name)
     elif mesh is not None:
         raise ValueError("mesh= is only meaningful with comm='axis'")
-    return opt
+    return dataclasses.replace(
+        opt, rebuild=lambda **ov: make_optimizer(
+            **{**factory_kwargs, **ov}))

@@ -107,6 +107,24 @@ def main() -> None:
                     help="gradient-accumulation microbatches per step "
                          "(must divide --batch); divides activation "
                          "memory by this factor in every backend")
+    ap.add_argument("--damping", default="",
+                    help="adaptive batch damping policy spec: "
+                         "'adadamp:MAX[:EMA]', 'padadamp:MAX[:RATE]' or "
+                         "'geodamp:MAX[:FACTOR[:DELAY]]' — grows the "
+                         "gradient-accumulation chunk count as the loss "
+                         "falls (MAX must divide --batch); one compiled "
+                         "step serves every damping level. Mutually "
+                         "exclusive with --microbatch > 1")
+    ap.add_argument("--damping-per-worker", action="store_true",
+                    help="one damping signal per worker (non-IID shards) "
+                         "instead of the global mean-loss signal")
+    ap.add_argument("--damping-lr-decay", type=float, default=0.5,
+                    help="eta decay factor applied once the batch hits "
+                         "the damping ceiling (with --damping-lr-decay-"
+                         "every > 0)")
+    ap.add_argument("--damping-lr-decay-every", type=int, default=0,
+                    help="decay eta every N steps spent with every "
+                         "worker at max_chunks (0 = off)")
     ap.add_argument("--skew", type=float, default=0.5,
                     help="non-IID-ness of worker shards")
     ap.add_argument("--ckpt", default="")
@@ -148,8 +166,23 @@ def main() -> None:
     # P(..., 'model') instead of replicating whole per-worker param sets
     plan = (make_plan(arch, mesh, multi_pod=False, mode="axis")
             if args.model_parallel > 1 else None)
+    damping = None
+    if args.damping:
+        import dataclasses as _dc
+
+        from repro.train import make_damping
+        damping = _dc.replace(
+            make_damping(args.damping),
+            per_worker=args.damping_per_worker,
+            lr_decay=args.damping_lr_decay,
+            lr_decay_every=args.damping_lr_decay_every)
+        if args.batch % damping.max_chunks:
+            raise SystemExit(
+                f"--damping max_chunks {damping.max_chunks} must divide "
+                f"--batch {args.batch}")
     trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt,
                                    microbatch=args.microbatch, plan=plan,
+                                   damping=damping,
                                    sharded_loss=getattr(api, "sharded_loss",
                                                         None))
     params = api.init(jax.random.PRNGKey(0))
@@ -181,18 +214,27 @@ def main() -> None:
               f"{(spec.rows * 128 - spec.n) / max(spec.rows * 128, 1):.1%} "
               f"tile padding)")
 
+    if damping is not None:
+        print(f"[train] batch damping: {damping.policy} chunks "
+              f"{damping.min_chunks}..{damping.max_chunks} "
+              f"({'per-worker' if damping.per_worker else 'global'} "
+              f"signal); one compiled step across all levels")
+
     it = make_batch_iter(cfg, args.workers, args.batch, args.seq, args.skew)
     t0 = time.perf_counter()
     done = 0
-    comm_total = 0.0
+    log = None
     while done < args.steps:
         n = min(args.log_every, args.steps - done)
-        state, log = trainer.fit(state, it, n, log_every=n)
+        # the log CONTINUES across fit calls: comm_mb / wall_s / grad
+        # evals are cumulative, and schedule-entry comm accounting stays
+        # aligned round to round
+        state, log = trainer.fit(state, it, n, log_every=n, log=log)
         done += n
-        comm_total += log.comm_mb[-1]
         print(f"[train] step {done:5d} loss={log.loss[-1]:.4f} "
               f"consensus={log.consensus[-1]:.3e} "
-              f"comm={comm_total:.1f}MB "
+              f"comm={log.comm_mb[-1]:.1f}MB "
+              f"evals={log.grad_evals[-1]} "
               f"({(time.perf_counter() - t0) / done * 1e3:.0f} ms/step)")
         if args.ckpt and args.ckpt_every and done % args.ckpt_every == 0:
             save(args.ckpt, state, step=done,

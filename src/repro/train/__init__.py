@@ -1,7 +1,9 @@
+from repro.train.damping import DampingConfig, DampingState, make_damping
 from repro.train.grad import (GradPipeline, ShardCtx, make_grad_pipeline,
                               make_worker_grad, row_parallel_dot)
 from repro.train.loop import DecentralizedTrainer, TrainLog, stack_params
 
 __all__ = ["DecentralizedTrainer", "TrainLog", "stack_params",
            "GradPipeline", "ShardCtx", "make_grad_pipeline",
-           "make_worker_grad", "row_parallel_dot"]
+           "make_worker_grad", "row_parallel_dot",
+           "DampingConfig", "DampingState", "make_damping"]

@@ -1,0 +1,257 @@
+"""Adaptive batch damping: map the running loss to a gradient-accumulation
+count.
+
+The paper's theme is adaptivity computed from data — it adapts the step
+size; this module extends that to the *batch size* in the AdaDamp /
+PadaDamp / GeoDamp style: grow the effective batch as the loss falls, so
+early steps stay cheap (few gradient evaluations, high tolerable
+variance) and late steps stay low-variance (large batch near the
+optimum). The knob is the number of gradient-accumulation **chunks** the
+grad pipeline consumes per step:
+
+* ``adadamp``  — chunks proportional to ``initial_loss / running_loss``
+  (the loss-ratio rule; monotone non-decreasing so a noisy loss spike
+  never shrinks the batch back down).
+* ``padadamp`` — linear growth ``min_chunks + rate * t`` (the practical
+  approximation: no loss feedback needed, just a slope).
+* ``geodamp``  — geometric growth ``min_chunks * factor ** (t // delay)``
+  (double every ``delay`` steps, the staged schedule).
+
+jit shapes stay **static**: the pipeline always scans over
+``max_chunks`` fixed-shape chunks and masks the unused tail
+(``train.grad``'s damped pipelines), so one XLA program serves every
+damping level — the JXL003 recompile watch pins this. What varies is
+only the *accounting*: chunks beyond the current level contribute
+nothing, cost no gradient-evaluation budget (the serverless billing
+unit ``DampingState.evals`` tracks), and the loss/grad means divide by
+the live count.
+
+Per-worker damping (``per_worker=True``) keeps one signal per worker —
+under non-IID skew each worker's loss (hence gradient variance) differs,
+so its batch should too (the D² argument). The EMA state is a stacked
+``(K,)`` vector; the trainer updates it from the pipeline's per-worker
+losses, which are already psum'd/gathered to a global ``(K,)`` at the
+jit level in every comm mode.
+
+Once every worker sits at ``max_chunks`` the batch can no longer grow;
+``lr_decay`` / ``lr_decay_every`` then hands adaptivity back to the step
+size (the trainer decays eta once per ``lr_decay_every`` steps spent at
+the ceiling — see ``DecentralizedTrainer``).
+
+Example — AdaDamp grows the chunk count as the loss falls (``ema=0``
+makes the signal instantaneous for the doctest):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.train.damping import (DampingConfig, chunks_of,
+    ...                                  init_damping, update)
+    >>> cfg = DampingConfig(policy="adadamp", max_chunks=4, ema=0.0)
+    >>> d = init_damping(cfg, K=2)
+    >>> [int(c) for c in chunks_of(d, cfg, K=2)]
+    [1, 1]
+    >>> d = update(d, jnp.array([2.0, 2.0]), cfg)  # seeds loss0 = 2.0
+    >>> d = update(d, jnp.array([0.5, 0.5]), cfg)  # loss fell 4x
+    >>> [int(c) for c in chunks_of(d, cfg, K=2)]
+    [4, 4]
+    >>> int(d.evals)                               # 2 steps x (1+1) chunks
+    4
+
+GeoDamp doubles every ``delay`` update calls, loss-free:
+
+    >>> cfg = DampingConfig(policy="geodamp", max_chunks=8, factor=2.0,
+    ...                     delay=2)
+    >>> d, ns = init_damping(cfg, K=1), []
+    >>> for _ in range(6):
+    ...     ns.append(int(chunks_of(d, cfg, K=1)[0]))
+    ...     d = update(d, jnp.array([1.0]), cfg)
+    >>> ns
+    [1, 1, 2, 2, 4, 4]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+_POLICIES = ("adadamp", "padadamp", "geodamp")
+
+
+@dataclasses.dataclass(frozen=True)
+class DampingConfig:
+    """Static damping policy config (hashable; safe to close over in jit).
+
+    Attributes:
+      policy: ``'adadamp'`` | ``'padadamp'`` | ``'geodamp'``.
+      max_chunks: accumulation-chunk ceiling — the pipeline's static scan
+        length; the per-worker batch dim must be divisible by it.
+      min_chunks: floor (the starting batch), >= 1.
+      ema: loss-EMA decay for the adadamp signal (0 = instantaneous).
+      per_worker: one damping signal per worker (non-IID skew) instead of
+        one global mean-loss signal.
+      rate: padadamp chunks gained per step.
+      factor, delay: geodamp multiplies the count by ``factor`` every
+        ``delay`` steps.
+      lr_decay, lr_decay_every: once ALL workers sit at ``max_chunks``,
+        decay eta by ``lr_decay`` for every ``lr_decay_every`` steps
+        spent at the ceiling (0 disables; needs ``opt.rebuild``).
+    """
+
+    policy: str = "adadamp"
+    max_chunks: int = 4
+    min_chunks: int = 1
+    ema: float = 0.9
+    per_worker: bool = False
+    rate: float = 0.25
+    factor: float = 2.0
+    delay: int = 100
+    lr_decay: float = 0.5
+    lr_decay_every: int = 0
+
+    def __post_init__(self) -> None:
+        if self.policy not in _POLICIES:
+            raise ValueError(f"unknown damping policy {self.policy!r} "
+                             f"(use one of {list(_POLICIES)})")
+        if not 1 <= self.min_chunks <= self.max_chunks:
+            raise ValueError(
+                f"need 1 <= min_chunks <= max_chunks, got "
+                f"min_chunks={self.min_chunks} max_chunks={self.max_chunks}")
+        if not 0.0 <= self.ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1), got {self.ema}")
+        if self.policy == "padadamp" and self.rate <= 0:
+            raise ValueError("padadamp needs rate > 0 (chunks per step)")
+        if self.policy == "geodamp" and (self.factor <= 1.0
+                                         or self.delay < 1):
+            raise ValueError("geodamp needs factor > 1 and delay >= 1, "
+                             f"got factor={self.factor} delay={self.delay}")
+        if not 0.0 < self.lr_decay <= 1.0:
+            raise ValueError(f"lr_decay must be in (0, 1], "
+                             f"got {self.lr_decay}")
+        if self.lr_decay_every < 0:
+            raise ValueError("lr_decay_every must be >= 0 (0 disables)")
+
+
+class DampingState(NamedTuple):
+    """Traced damping state (a pytree of arrays; lives inside the jitted
+    step). ``S`` = K when ``per_worker`` else 1."""
+
+    ema_loss: jax.Array   # (S,) f32 running loss signal
+    loss0: jax.Array      # (S,) f32 seed loss (first observed)
+    t: jax.Array          # ()  i32 update count
+    level: jax.Array      # (S,) f32 continuous chunk level
+    at_max: jax.Array     # ()  i32 steps with every worker at the ceiling
+    evals: jax.Array      # ()  i32 cumulative worker-chunk gradient evals
+
+
+def init_damping(cfg: DampingConfig, K: int) -> DampingState:
+    """Fresh damping state for ``K`` workers at the ``min_chunks`` floor."""
+    S = K if cfg.per_worker else 1
+    return DampingState(
+        ema_loss=jnp.zeros((S,), jnp.float32),
+        loss0=jnp.zeros((S,), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+        level=jnp.full((S,), float(cfg.min_chunks), jnp.float32),
+        at_max=jnp.zeros((), jnp.int32),
+        evals=jnp.zeros((), jnp.int32))
+
+
+def chunks_of(state: DampingState, cfg: DampingConfig,
+              K: int) -> jax.Array:
+    """Per-worker accumulation-chunk counts for the NEXT step: ``(K,)``
+    int32 in ``[min_chunks, max_chunks]`` (broadcast from the global
+    signal when ``per_worker=False``)."""
+    n = jnp.clip(jnp.ceil(state.level), cfg.min_chunks,
+                 cfg.max_chunks).astype(jnp.int32)
+    return jnp.broadcast_to(n, (K,))
+
+
+def update(state: DampingState, losses: jax.Array,
+           cfg: DampingConfig) -> DampingState:
+    """Fold one step's per-worker losses ``(K,)`` into the damping state.
+
+    Pure and traced — called inside the jitted trainer step, after the
+    grad pipeline. The first call seeds ``loss0`` and the EMA; the
+    adadamp level is monotone non-decreasing (a noisy spike never shrinks
+    the batch). ``evals`` accrues the chunks the step just consumed and
+    ``at_max`` the steps spent with every worker at the ceiling — the
+    trainer's lr-decay trigger."""
+    K = losses.shape[0]
+    losses = losses.astype(jnp.float32)
+    sig = losses if cfg.per_worker else jnp.mean(losses, keepdims=True)
+    first = state.t == 0
+    ema = jnp.where(first, sig,
+                    cfg.ema * state.ema_loss + (1.0 - cfg.ema) * sig)
+    loss0 = jnp.where(first, sig, state.loss0)
+    t1 = state.t + 1
+    if cfg.policy == "adadamp":
+        lvl = cfg.min_chunks * loss0 / jnp.maximum(ema, 1e-12)
+        lvl = jnp.maximum(state.level, lvl)
+    elif cfg.policy == "padadamp":
+        lvl = jnp.full_like(state.level,
+                            cfg.min_chunks + cfg.rate * t1.astype(
+                                jnp.float32))
+    else:  # geodamp
+        lvl = jnp.full_like(state.level, float(cfg.min_chunks)) * jnp.power(
+            cfg.factor, (t1 // cfg.delay).astype(jnp.float32))
+    lvl = jnp.clip(lvl, float(cfg.min_chunks), float(cfg.max_chunks))
+    n_used = chunks_of(state, cfg, K)  # chunks THIS step consumed
+    return DampingState(
+        ema_loss=ema, loss0=loss0, t=t1, level=lvl,
+        at_max=state.at_max + jnp.all(
+            n_used >= cfg.max_chunks).astype(jnp.int32),
+        evals=state.evals + jnp.sum(n_used))
+
+
+def resize_damp(state: DampingState, cfg: DampingConfig,
+                new_K: int) -> DampingState:
+    """Carry damping state across an elastic membership change: global
+    signals pass through; per-worker signals map onto the new worker set
+    round-robin (joiners inherit a live worker's signal, mirroring
+    ``elastic.resize_state``'s 'clone' strategy)."""
+    if not cfg.per_worker:
+        return state
+    S = state.level.shape[0]
+    idx = jnp.arange(new_K) % S
+    return state._replace(ema_loss=jnp.take(state.ema_loss, idx),
+                          loss0=jnp.take(state.loss0, idx),
+                          level=jnp.take(state.level, idx))
+
+
+def make_damping(spec: Union[None, str, DampingConfig]
+                 ) -> Optional[DampingConfig]:
+    """Parse a damping spec: a built config passes through, ``None``
+    disables, and a string is ``'policy:max_chunks[:extra...]'`` —
+
+    * ``'adadamp:MAX[:EMA]'``
+    * ``'padadamp:MAX[:RATE]'``
+    * ``'geodamp:MAX[:FACTOR[:DELAY]]'``
+
+    >>> from repro.train.damping import make_damping
+    >>> make_damping("adadamp:8").max_chunks
+    8
+    >>> make_damping("geodamp:8:2:50").delay
+    50
+    >>> make_damping(None) is None
+    True
+    """
+    if spec is None or isinstance(spec, DampingConfig):
+        return spec
+    parts = spec.split(":")
+    policy = parts[0].lower().replace("_", "-").replace("-", "")
+    if policy not in _POLICIES:
+        raise ValueError(f"unknown damping policy {parts[0]!r} "
+                         f"(use one of {list(_POLICIES)})")
+    kw: dict = {"policy": policy}
+    if len(parts) > 1:
+        kw["max_chunks"] = int(parts[1])
+    extras = parts[2:]
+    if extras:
+        if policy == "adadamp":
+            kw["ema"] = float(extras[0])
+        elif policy == "padadamp":
+            kw["rate"] = float(extras[0])
+        else:
+            kw["factor"] = float(extras[0])
+            if len(extras) > 1:
+                kw["delay"] = int(extras[1])
+    return DampingConfig(**kw)

@@ -97,16 +97,21 @@ def make_worker_value_and_grad(loss: Callable[[PyTree, PyTree], jax.Array],
 def _split_micro(batch: PyTree, microbatch: int, batch_dim: int) -> PyTree:
     """Reshape every leaf's batch dim b into a leading scan dim:
     (..., b, ...) -> (microbatch, ..., b/microbatch, ...)."""
-    def split(x):
+    def split(path, x):
         b = x.shape[batch_dim]
         if b % microbatch:
+            divisors = [d for d in range(1, b + 1) if b % d == 0]
+            nearest = min(divisors, key=lambda d: (abs(d - microbatch), -d))
             raise ValueError(
-                f"batch dim {b} not divisible by microbatch={microbatch}")
+                f"batch leaf {jax.tree_util.keystr(path) or '<root>'}: "
+                f"per-worker batch dim {b} is not divisible into "
+                f"{microbatch} accumulation chunks (microbatch / damping "
+                f"max_chunks); nearest valid count is {nearest}")
         shape = (x.shape[:batch_dim] + (microbatch, b // microbatch)
                  + x.shape[batch_dim + 1:])
         return jnp.moveaxis(x.reshape(shape), batch_dim, 0)
 
-    return jax.tree_util.tree_map(split, batch)
+    return jax.tree_util.tree_map_with_path(split, batch)
 
 
 # ------------------------------ shard context -------------------------------
@@ -258,17 +263,26 @@ class GradPipeline:
     """A ``value_and_grad(state, batch) -> (losses (K,), grads)`` where
     ``grads`` is in the optimizer's native form: a stacked pytree
     (reference), a packed ``(K, rows, 128)`` buffer (packed), or a buffer
-    sharded ``P('worker', 'model')`` (sharded-packed)."""
+    sharded ``P('worker', 'model')`` (sharded-packed).
+
+    With ``damping_chunks`` > 0 the signature grows a third argument:
+    ``value_and_grad(state, batch, n)`` where ``n`` is a traced ``(K,)``
+    int32 of per-worker live-chunk counts — the pipeline always scans
+    over ``damping_chunks`` fixed-shape chunks and masks the tail beyond
+    each worker's ``n[k]``, so every damping level shares ONE compiled
+    program (see ``train.damping``)."""
 
     mode: str                 # 'reference' | 'packed' | 'sharded-packed'
-    value_and_grad: Callable[[Any, PyTree], Any]
+    value_and_grad: Callable[..., Any]
     microbatch: int = 1
+    damping_chunks: int = 0   # 0 = undamped 2-arg pipeline
 
 
 def make_grad_pipeline(loss: Callable[[PyTree, PyTree], jax.Array],
                        opt: Any, *, microbatch: int = 1,
                        sharded_loss: Optional[Callable] = None,
-                       plan: Any = None) -> GradPipeline:
+                       plan: Any = None,
+                       damping_chunks: int = 0) -> GradPipeline:
     """Build the gradient pipeline for ``opt`` (a DecentralizedOptimizer).
 
     Dispatch: ``backend='pallas'`` states are packed-resident → the
@@ -289,6 +303,12 @@ def make_grad_pipeline(loss: Callable[[PyTree, PyTree], jax.Array],
         the shard_map on each device's ``(1, rows/M, 128)`` row shard;
         selects the ``'sharded-packed'`` mode on a 2D mesh.
       plan: sharding constraints for the 2D GSPMD fallback only.
+      damping_chunks: > 0 builds the adaptive-batch-damping variant of
+        the mode: a 3-arg ``value_and_grad(state, batch, n)`` that scans
+        over this many fixed-shape chunks and masks chunks past each
+        worker's traced live count ``n[k]`` (``train.damping``). One
+        compiled program serves every damping level. Mutually exclusive
+        with ``microbatch`` > 1 (damping owns the accumulation loop).
 
     Returns:
       A :class:`GradPipeline` — ``mode`` in ``('reference', 'packed',
@@ -319,17 +339,41 @@ def make_grad_pipeline(loss: Callable[[PyTree, PyTree], jax.Array],
     M = int(getattr(cfg, "model_parallel", 1))
     if microbatch < 1:
         raise ValueError(f"microbatch must be >= 1, got {microbatch}")
+    if damping_chunks:
+        if damping_chunks < 1:
+            raise ValueError(
+                f"damping_chunks must be >= 1, got {damping_chunks}")
+        if microbatch > 1:
+            raise ValueError(
+                "damping owns the accumulation loop (its max_chunks IS "
+                "the chunk count); microbatch > 1 alongside "
+                "damping_chunks is ambiguous — set one, not both")
 
     if packed and M > 1 and sharded_loss is not None:
         if opt.sharded_value_and_grad is None:
             raise ValueError(
                 "sharded_loss needs a 2D comm='axis' optimizer (mesh with "
                 "a 'model' axis); this one has no sharded execution hook")
+        if damping_chunks:
+            vag = _sharded_packed_damped_vag(sharded_loss, opt,
+                                             damping_chunks)
+            return GradPipeline("sharded-packed", vag, 1, damping_chunks)
         vag = _sharded_packed_vag(sharded_loss, opt, microbatch)
         return GradPipeline("sharded-packed", vag, microbatch)
     if packed:
+        if damping_chunks:
+            vag = _packed_damped_vag(loss, opt, damping_chunks, plan)
+            return GradPipeline("packed", vag, 1, damping_chunks)
         vag = _packed_vag(loss, opt, microbatch, plan)
         return GradPipeline("packed", vag, microbatch)
+    if damping_chunks:
+        worker_vag = _damped_worker_vag(loss, damping_chunks)
+
+        def reference_damped_vag(state, batch, n):
+            return jax.vmap(worker_vag)(opt.params_of(state), batch, n)
+
+        return GradPipeline("reference", reference_damped_vag, 1,
+                            damping_chunks)
     worker_vag = make_worker_value_and_grad(loss, microbatch)
 
     def reference_vag(state, batch):
@@ -378,6 +422,132 @@ def _packed_vag(loss, opt, microbatch: int, plan: Any):
         init = (jnp.zeros((K,)), jnp.zeros_like(state.buf))
         (lsum, acc), _ = jax.lax.scan(body, init, micro)
         return lsum / microbatch, acc / microbatch
+
+    return vag
+
+
+# --------------------- adaptive-batch-damped variants ------------------------
+#
+# Same three modes, scanning over ``C = damping_chunks`` FIXED-shape
+# chunks with a mask ``i < n[k]`` on each worker's contribution — the
+# chunk count is a traced int, the shapes are static, so one compiled
+# program serves every damping level. Masking is ``jnp.where`` (not a
+# multiply) so a NaN in an unused chunk's loss/grads cannot poison the
+# sum through ``0 * nan``; loss and grads divide by the LIVE count.
+
+
+def _damped_worker_vag(loss, C: int):
+    """Per-worker damped value+grad: ``(params, batch, n_k) ->
+    (loss, grads)`` averaged over the first ``n_k`` of ``C`` chunks."""
+
+    def worker_vag(params: PyTree, batch: PyTree, n_k: jax.Array):
+        micro = _split_micro(batch, C, batch_dim=0)
+        zeros = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+        def body(carry, xs):
+            mb, i = xs
+            lsum, acc = carry
+            l, g = jax.value_and_grad(loss)(params, mb)
+            use = i < n_k
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + jnp.where(use, b.astype(a.dtype), 0), acc,
+                g)
+            return (lsum + jnp.where(use, l, 0.0), acc), ()
+
+        (lsum, acc), _ = jax.lax.scan(body, (jnp.zeros(()), zeros),
+                                      (micro, jnp.arange(C)))
+        nf = n_k.astype(jnp.float32)
+        return lsum / nf, jax.tree_util.tree_map(lambda g: g / nf, acc)
+
+    return worker_vag
+
+
+def _packed_damped_vag(loss, opt, C: int, plan: Any):
+    """Damped differentiate-through-unpack: the per-worker mask
+    ``i < n (K,)`` zeroes whole workers' chunk contributions."""
+
+    def vag(state, batch, n):
+        spec = state.spec
+
+        def one(buf, b):
+            def stacked_loss(bf):
+                params = packing.unpack(bf, spec)
+                if plan is not None:
+                    params = _loss_constraints(plan, params)
+                losses = jax.vmap(loss)(params, b)
+                return jnp.sum(losses), losses
+
+            (_, losses), g = jax.value_and_grad(
+                stacked_loss, has_aux=True)(buf)
+            return losses, g
+
+        micro = _split_micro(batch, C, batch_dim=1)
+        K = state.buf.shape[0]
+
+        def body(carry, xs):
+            mb, i = xs
+            lsum, acc = carry
+            losses, g = one(state.buf, mb)
+            use = i < n  # (K,) bool
+            losses = jnp.where(use, losses, 0.0)
+            g = jnp.where(use[:, None, None], g, 0.0)
+            return (lsum + losses, acc + g), ()
+
+        init = (jnp.zeros((K,)), jnp.zeros_like(state.buf))
+        (lsum, acc), _ = jax.lax.scan(body, init,
+                                      (micro, jnp.arange(C)))
+        nf = n.astype(jnp.float32)
+        return lsum / nf, acc / nf[:, None, None]
+
+    return vag
+
+
+def _sharded_packed_damped_vag(sharded_loss, opt, C: int):
+    """Damped model-parallel path. The per-worker count ``n (K,)`` rides
+    INTO the 2D shard_map as part of the batch argument —
+    ``worker_pspec_tree`` gives any leading-K leaf ``P('worker')``, so
+    each worker's shard sees its own ``(1,)`` slice. The mask lives
+    inside the shard_map; no new collectives, the zero-all-gather
+    property is untouched (``analysis.check``'s 'damping' variant pins
+    it)."""
+    cfg = opt.cfg
+    ctx_axis = cfg.model_axis_name
+    M = int(cfg.model_parallel)
+
+    def vag(state, batch, n):
+        spec = state.spec
+        ctx = ShardCtx(spec=spec, axis_name=ctx_axis, n_shards=M)
+
+        def local_vag(buf_local, batch_n):
+            batch_local, n_local = batch_n
+            n_k = n_local[0]
+            one_batch = jax.tree_util.tree_map(lambda x: x[0], batch_local)
+
+            def local_loss(bl, b):
+                chunks = jax.tree_util.tree_map(
+                    lambda x: x[0], packing.unpack_local(bl, spec))
+                return sharded_loss(chunks, b, ctx)
+
+            micro = _split_micro(one_batch, C, batch_dim=0)
+
+            def body(carry, xs):
+                mb, i = xs
+                lsum, acc = carry
+                l, g = jax.value_and_grad(local_loss)(buf_local, mb)
+                use = i < n_k
+                lsum = lsum + jnp.where(use, l, 0.0)
+                acc = acc + jnp.where(use, g, 0.0)
+                return (lsum, acc), ()
+
+            init = (jnp.zeros(()), jnp.zeros_like(buf_local))
+            (lsum, acc), _ = jax.lax.scan(body, init,
+                                          (micro, jnp.arange(C)))
+            nf = n_k.astype(jnp.float32)
+            return (lsum / nf)[None], acc / nf
+
+        return opt.sharded_value_and_grad(local_vag, state,
+                                          (batch, n))
 
     return vag
 

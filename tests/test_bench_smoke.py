@@ -167,6 +167,46 @@ def test_fused_step_axis_paths_execute_under_tier1():
         assert rec["pallas_axis2d_us_per_step"] > 0
 
 
+def test_damping_smoke(tmp_path, capsys):
+    """The damping benchmark must keep producing its record schema AND
+    its headline claim at smoke size: the damped run reaches the
+    fixed-batch target loss on the DeepFM CTR task in fewer gradient
+    evaluations, from ONE compiled step across every damping level."""
+    from benchmarks import damping
+
+    out = tmp_path / "damp.json"
+    record = damping.main(steps=8, lm_steps=3, out=str(out))
+
+    assert record["benchmark"] == "damping"
+    assert record["jax_version"] == jax.__version__
+    assert record["workers"] == damping.K
+    assert {r["task"] for r in record["records"]} == {"ctr", "lm"}
+    for rec in record["records"]:
+        assert rec["policy"] == "adadamp"
+        assert rec["max_chunks"] in (damping.CTR_CHUNKS, damping.LM_CHUNKS)
+        assert isinstance(rec["target_loss"], float)
+        for side in ("fixed", "damped"):
+            assert rec[side]["steps"] > 0
+            assert rec[side]["grad_evals"] > 0
+            assert isinstance(rec[side]["final_loss"], float)
+        # one XLA program serves every damping level (recompile_limit=1
+        # is armed inside the benchmark, so >1 would have raised there —
+        # this pins the field the CI summary scrapes)
+        assert rec["damped"]["compiles"] == 1
+    ctr = next(r for r in record["records"] if r["task"] == "ctr")
+    assert ctr["per_worker"] is True
+    # the acceptance pin: damped reaches the fixed-batch target on CTR
+    # with strictly fewer gradient evaluations
+    assert ctr["damped"]["reached"] is True
+    assert ctr["damped"]["grad_evals"] < ctr["fixed"]["grad_evals"]
+
+    assert json.loads(out.read_text()) == record
+    stdout = capsys.readouterr().out
+    json_lines = [ln for ln in stdout.splitlines() if ln.startswith("JSON ")]
+    assert len(json_lines) == 1
+    assert json.loads(json_lines[0][5:])["benchmark"] == "damping"
+
+
 # ----------------------- committed bench trajectory --------------------------
 
 
@@ -190,8 +230,8 @@ def test_bench_trajectory_committed_and_schema_stable():
     assert path is not None, \
         "no committed BENCH_<pr>.json; run scripts/bench_trajectory.py"
     committed = json.loads(path.read_text())
-    assert {"pr", "jax_version", "fused_step",
-            "heterogeneity"} <= set(committed)
+    assert {"pr", "jax_version", "fused_step", "heterogeneity",
+            "damping"} <= set(committed)
     assert committed["pr"] == int(path.stem.split("_")[1])
 
     if jax.device_count() < 4:
@@ -207,3 +247,8 @@ def test_bench_trajectory_committed_and_schema_stable():
     fresh_het = heterogeneity.main(steps=4)
     assert schema_of(fresh_het) == schema_of(committed["heterogeneity"]), \
         "heterogeneity record schema drifted from the committed trajectory"
+
+    from benchmarks import damping
+    fresh_damp = damping.main(steps=6, lm_steps=2)
+    assert schema_of(fresh_damp) == schema_of(committed["damping"]), \
+        "damping record schema drifted from the committed trajectory"

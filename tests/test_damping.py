@@ -1,0 +1,398 @@
+"""Adaptive batch damping (train/damping.py + the damped grad pipeline)
+and the trainer accounting fixes that ride with it.
+
+Pins:
+
+* policy math — AdaDamp monotone loss-ratio growth, PadaDamp linear,
+  GeoDamp staged doubling; the spec-string parser; config validation.
+* masked-pipeline parity — a damped step with every chunk live is
+  bitwise the ``microbatch=max_chunks`` accumulation step, in the
+  reference AND packed modes; per-worker counts mask per worker.
+* compile-once — one XLA program serves every damping level
+  (``recompile_limit=1`` armed, ``_cache_size() == 1`` asserted), and a
+  NaN in a masked-out chunk cannot poison the gradients.
+* lr decay — once every worker sits at ``max_chunks``, the trainer
+  rebuilds via ``opt.rebuild`` with a decayed eta.
+* log continuation — ``TrainLog``'s cumulative counters resume across
+  ``fit`` calls and an elastic ``resize``; schedule-entry comm bytes are
+  accounted per round, not from a stale cached mean.
+* error messages — ``stack_params(same_init=False, key=None)`` and the
+  non-divisible ``_split_micro`` leaf-path error.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import make_optimizer
+from repro.train import (DampingConfig, DecentralizedTrainer, make_damping,
+                         make_grad_pipeline, stack_params)
+from repro.train.damping import chunks_of, init_damping, resize_damp, update
+from repro.train.grad import _split_micro
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _loss(p, b):
+    return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+
+def _params():
+    return {"w": jax.random.normal(KEY, (6, 2)) * 0.1}
+
+
+def _batches(K=2, batch=8, seed=0):
+    t = 0
+    while True:
+        kt = jax.random.fold_in(jax.random.PRNGKey(seed), t)
+        x = jax.random.normal(kt, (K, batch, 6))
+        yield {"x": x, "y": x @ jnp.ones((6, 2))}
+        t += 1
+
+
+# ------------------------------ policy math ----------------------------------
+
+
+class TestPolicies:
+    def test_adadamp_grows_with_loss_ratio_and_is_monotone(self):
+        cfg = DampingConfig(policy="adadamp", max_chunks=8, ema=0.0)
+        d = init_damping(cfg, K=2)
+        d = update(d, jnp.array([4.0, 4.0]), cfg)   # seeds loss0=4
+        assert [int(c) for c in chunks_of(d, cfg, 2)] == [1, 1]
+        d = update(d, jnp.array([1.0, 1.0]), cfg)   # 4x drop -> 4 chunks
+        assert [int(c) for c in chunks_of(d, cfg, 2)] == [4, 4]
+        d = update(d, jnp.array([8.0, 8.0]), cfg)   # spike: never shrinks
+        assert [int(c) for c in chunks_of(d, cfg, 2)] == [4, 4]
+        d = update(d, jnp.array([0.25, 0.25]), cfg)
+        assert [int(c) for c in chunks_of(d, cfg, 2)] == [8, 8]
+
+    def test_adadamp_per_worker_signals_diverge(self):
+        cfg = DampingConfig(policy="adadamp", max_chunks=8, ema=0.0,
+                            per_worker=True)
+        d = init_damping(cfg, K=2)
+        d = update(d, jnp.array([4.0, 4.0]), cfg)
+        d = update(d, jnp.array([1.0, 4.0]), cfg)  # only worker 0 improved
+        assert [int(c) for c in chunks_of(d, cfg, 2)] == [4, 1]
+
+    def test_padadamp_linear(self):
+        cfg = DampingConfig(policy="padadamp", max_chunks=8, rate=1.0)
+        d = init_damping(cfg, K=1)
+        for want in (1, 2, 3, 4):
+            assert int(chunks_of(d, cfg, 1)[0]) == want
+            d = update(d, jnp.array([1.0]), cfg)
+
+    def test_geodamp_staged_doubling(self):
+        cfg = DampingConfig(policy="geodamp", max_chunks=8, factor=2.0,
+                            delay=2)
+        d, seen = init_damping(cfg, K=1), []
+        for _ in range(8):
+            seen.append(int(chunks_of(d, cfg, 1)[0]))
+            d = update(d, jnp.array([1.0]), cfg)
+        assert seen == [1, 1, 2, 2, 4, 4, 8, 8]
+
+    def test_eval_and_ceiling_counters(self):
+        cfg = DampingConfig(policy="geodamp", max_chunks=2, factor=2.0,
+                            delay=1)
+        d = init_damping(cfg, K=2)
+        d = update(d, jnp.array([1.0, 1.0]), cfg)  # consumed 2x1 chunks
+        assert int(d.evals) == 2 and int(d.at_max) == 0
+        d = update(d, jnp.array([1.0, 1.0]), cfg)  # now at 2x2 (ceiling)
+        assert int(d.evals) == 6 and int(d.at_max) == 1
+
+    def test_parser_and_validation(self):
+        assert make_damping("adadamp:8").max_chunks == 8
+        assert make_damping("padadamp:4:0.5").rate == 0.5
+        g = make_damping("geodamp:8:2:50")
+        assert (g.factor, g.delay) == (2.0, 50)
+        assert make_damping(None) is None
+        cfg = DampingConfig()
+        assert make_damping(cfg) is cfg
+        with pytest.raises(ValueError, match="unknown damping policy"):
+            make_damping("warp:4")
+        with pytest.raises(ValueError, match="min_chunks"):
+            DampingConfig(max_chunks=2, min_chunks=3)
+        with pytest.raises(ValueError, match="rate"):
+            DampingConfig(policy="padadamp", rate=0.0)
+        with pytest.raises(ValueError, match="factor"):
+            DampingConfig(policy="geodamp", factor=1.0)
+
+    def test_resize_round_robin(self):
+        cfg = DampingConfig(policy="adadamp", max_chunks=4,
+                            per_worker=True)
+        d = init_damping(cfg, K=2)
+        d = d._replace(level=jnp.array([3.0, 1.0]))
+        grown = resize_damp(d, cfg, 3)
+        assert [float(x) for x in grown.level] == [3.0, 1.0, 3.0]
+        assert int(grown.evals) == int(d.evals)
+        # global signal passes through untouched
+        gcfg = DampingConfig(policy="adadamp", max_chunks=4)
+        gd = init_damping(gcfg, K=2)
+        assert resize_damp(gd, gcfg, 5) is gd
+
+
+# ------------------------- masked-pipeline parity ----------------------------
+
+
+class TestDampedPipelineParity:
+    def _batch(self, K=2, batch=8):
+        return next(_batches(K, batch))
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_all_chunks_live_equals_microbatch(self, backend):
+        """n == max_chunks must reproduce the undamped microbatch
+        accumulation exactly — same scan, mask all-true."""
+        C, K = 4, 2
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, backend=backend)
+        state = opt.init(stack_params(_params(), K))
+        batch = self._batch(K)
+        damped = make_grad_pipeline(_loss, opt, damping_chunks=C)
+        plain = make_grad_pipeline(_loss, opt, microbatch=C)
+        n = jnp.full((K,), C, jnp.int32)
+        dl, dg = damped.value_and_grad(state, batch, n)
+        pl, pg = plain.value_and_grad(state, batch)
+        assert jnp.allclose(dl, pl, atol=1e-6)
+        for a, b in zip(jax.tree_util.tree_leaves(dg),
+                        jax.tree_util.tree_leaves(pg)):
+            assert jnp.allclose(a, b, atol=1e-6)
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_per_worker_counts_mask_per_worker(self, backend):
+        """Worker k with n[k]=1 must get exactly its first-chunk grads
+        while a worker at the ceiling gets the full-batch grads."""
+        C, K = 4, 2
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, backend=backend)
+        state = opt.init(stack_params(_params(), K))
+        batch = self._batch(K)
+        damped = make_grad_pipeline(_loss, opt, damping_chunks=C)
+        losses, grads = damped.value_and_grad(
+            state, batch, jnp.array([1, C], jnp.int32))
+        # worker 0: first chunk only
+        chunk0 = jax.tree_util.tree_map(lambda x: x[:1, :2], batch)
+        l0, g0 = jax.value_and_grad(_loss)(
+            jax.tree_util.tree_map(lambda x: x[0],
+                                   opt.params_of(state)),
+            jax.tree_util.tree_map(lambda x: x[0], chunk0))
+        assert jnp.allclose(losses[0], l0, atol=1e-6)
+        # worker 1: the full batch
+        l1, g1 = jax.value_and_grad(_loss)(
+            jax.tree_util.tree_map(lambda x: x[1],
+                                   opt.params_of(state)),
+            jax.tree_util.tree_map(lambda x: x[1], batch))
+        assert jnp.allclose(losses[1], l1, atol=1e-6)
+        if backend == "reference":
+            assert jnp.allclose(grads["w"][0], g0["w"], atol=1e-6)
+            assert jnp.allclose(grads["w"][1], g1["w"], atol=1e-5)
+
+    def test_nan_in_masked_chunk_cannot_poison(self):
+        """Masking is where-based, not multiply-based: a NaN in a chunk
+        past the live count must not reach the grads."""
+        C, K = 2, 1
+        opt = make_optimizer("d-adam", K=K, eta=1e-2)
+        state = opt.init(stack_params(_params(), K))
+        batch = next(_batches(K, 8))
+        # poison the second chunk (rows 4:)
+        batch["x"] = batch["x"].at[:, 4:].set(jnp.nan)
+        damped = make_grad_pipeline(_loss, opt, damping_chunks=C)
+        losses, grads = damped.value_and_grad(
+            state, batch, jnp.array([1], jnp.int32))
+        assert jnp.isfinite(losses).all()
+        assert all(jnp.isfinite(g).all()
+                   for g in jax.tree_util.tree_leaves(grads))
+
+    def test_damping_excludes_microbatch(self):
+        opt = make_optimizer("d-adam", K=2, eta=1e-2)
+        with pytest.raises(ValueError, match="not both"):
+            make_grad_pipeline(_loss, opt, microbatch=2, damping_chunks=4)
+        with pytest.raises(ValueError, match="not both"):
+            DecentralizedTrainer(_loss, opt, microbatch=2,
+                                 damping="adadamp:4")
+
+
+# --------------------------- trainer integration -----------------------------
+
+
+class TestDampedTrainer:
+    def test_compile_once_across_levels(self):
+        """GeoDamp walks through every level; the jitted step must stay
+        at ONE compiled signature (JXL003 recompile watch armed)."""
+        opt = make_optimizer("d-adam", K=2, eta=1e-2, period=2)
+        tr = DecentralizedTrainer(
+            _loss, opt, recompile_limit=1,
+            damping=DampingConfig(policy="geodamp", max_chunks=4,
+                                  factor=2.0, delay=2))
+        state = tr.init(_params())
+        state, log = tr.fit(state, _batches(), 8, log_every=2)
+        assert tr._step._cache_size() == 1
+        # evals: 2 workers x chunks/step walking 1,1,2,2,4,4,4,4
+        assert log.grad_evals[-1] == 2 * (1 + 1 + 2 + 2 + 4 + 4 + 4 + 4)
+
+    def test_damped_loss_decreases(self):
+        opt = make_optimizer("d-adam", K=2, eta=1e-2, period=2)
+        tr = DecentralizedTrainer(_loss, opt, damping="adadamp:4")
+        state = tr.init(_params())
+        state, log = tr.fit(state, _batches(), 30, log_every=10)
+        assert log.loss[-1] < log.loss[0]
+
+    def test_lr_decay_rebuilds_with_smaller_eta(self):
+        """min==max chunks puts every step at the ceiling; after
+        lr_decay_every such steps the trainer must rebuild with decayed
+        eta via opt.rebuild."""
+        opt = make_optimizer("d-adam", K=2, eta=1e-2, period=2)
+        tr = DecentralizedTrainer(
+            _loss, opt,
+            damping=DampingConfig(policy="geodamp", max_chunks=2,
+                                  min_chunks=2, factor=2.0, delay=1,
+                                  lr_decay=0.5, lr_decay_every=4))
+        state = tr.init(_params())
+        state, _ = tr.fit(state, _batches(), 4, log_every=4)
+        assert tr.opt.cfg.eta == pytest.approx(5e-3)
+        state, _ = tr.fit(state, _batches(), 8, log_every=4)
+        assert tr.opt.cfg.eta == pytest.approx(1.25e-3)
+
+    def test_rebuild_hook_reproduces_config(self):
+        opt = make_optimizer("cd-adam", K=4, eta=1e-3, period=2,
+                             topology="ring", gamma=0.3)
+        opt2 = opt.rebuild(eta=5e-4)
+        assert opt2.cfg.eta == pytest.approx(5e-4)
+        assert opt2.cfg.gamma == opt.cfg.gamma
+        assert opt2.name == opt.name and opt2.K == opt.K
+
+    @pytest.mark.skipif(jax.device_count() < 2,
+                        reason="comm='axis' needs >= 2 devices")
+    def test_axis_parity_with_stacked(self):
+        """Damped training must give the same trajectory under
+        comm='axis' as comm='stacked' (same masked accumulation, gossip
+        lowered differently)."""
+        from repro.launch.mesh import make_worker_mesh
+
+        K = 2
+        damp = DampingConfig(policy="geodamp", max_chunks=2, delay=2,
+                             factor=2.0)
+        runs = {}
+        for comm, mesh in (("stacked", None),
+                           ("axis", make_worker_mesh(K))):
+            opt = make_optimizer("d-adam", K=K, eta=1e-2, period=2,
+                                 backend="pallas", comm=comm, mesh=mesh)
+            tr = DecentralizedTrainer(_loss, opt, damping=damp)
+            state = tr.init(_params())
+            state, log = tr.fit(state, _batches(), 6, log_every=2)
+            runs[comm] = log.loss
+        assert runs["stacked"] == pytest.approx(runs["axis"], rel=1e-4)
+
+
+# ----------------------- log continuation + accounting -----------------------
+
+
+class TestLogContinuation:
+    def _trainer(self, K=2, **kw):
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, period=2, **kw)
+        tr = DecentralizedTrainer(_loss, opt)
+        return tr, tr.init(_params())
+
+    def test_counters_resume_across_fits(self):
+        """The satellite bugfix: continuing a log across fit calls used
+        to reset comm_rounds and t0, making comm_mb / wall_s jump
+        backwards. They must now be cumulative and monotone."""
+        tr, state = self._trainer()
+        it = _batches()
+        state, log = tr.fit(state, it, 4, log_every=2)
+        state, log = tr.fit(state, it, 4, log_every=2, log=log)
+        assert log.step == [2, 4, 6, 8]
+        assert log.steps_total == 8
+        assert log.comm_rounds_total == 4
+        assert log.comm_mb == sorted(log.comm_mb)
+        assert log.comm_mb[-1] == pytest.approx(2 * log.comm_mb[1])
+        assert log.wall_s == sorted(log.wall_s)
+        assert log.grad_evals == [4, 8, 12, 16]
+        # two separate fits == one double-length fit, counter for counter
+        tr2, state2 = self._trainer()
+        _, log2 = tr2.fit(state2, _batches(), 8, log_every=2)
+        assert log2.comm_mb == pytest.approx(log.comm_mb)
+        assert log2.step == log.step
+
+    def test_schedule_entry_bytes_accounted_per_round(self):
+        """Under a TopologySchedule the per-round bytes follow the
+        entry's true degree — the cached-mean bug made every round cost
+        the cycle average."""
+        K = 4
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, period=1,
+                             topology="rand-ring:3")
+        degs = [len(e.offsets) for e in opt.topo.entries]
+        assert len(set(degs)) >= 1  # schedule exists
+        tr = DecentralizedTrainer(_loss, opt)
+        state = tr.init(_params())
+        state, log = tr.fit(state, _batches(K), len(degs), log_every=1)
+        per_round = [log.comm_mb[0]] + [
+            b - a for a, b in zip(log.comm_mb, log.comm_mb[1:])]
+        bytes_list = opt.comm_bytes_round_list(opt.params_of(state))
+        assert per_round == pytest.approx(
+            [b / 1e6 for b in bytes_list])
+
+    def test_comm_bytes_round_list_matches_mean(self):
+        opt = make_optimizer("d-adam", K=8, eta=1e-2,
+                             topology="one-peer-exp")
+        params = stack_params(_params(), 8)
+        per_round = opt.comm_bytes_round_list(params)
+        assert len(per_round) == len(opt.topo.entries)
+        assert sum(per_round) / len(per_round) == pytest.approx(
+            opt.comm_bytes_per_round(params))
+        # static topology: one uniform entry agreeing with the mean
+        ring = make_optimizer("d-adam", K=8, eta=1e-2, topology="ring")
+        assert ring.comm_bytes_round_list(params) == [
+            ring.comm_bytes_per_round(params)]
+
+    def test_resize_recomputes_per_round_bytes(self):
+        """The mb_per_round cache must not survive an elastic resize —
+        fewer workers means different per-worker bytes under cd-adam
+        whole-graph accounting and a fresh pipeline either way."""
+        K = 4
+        opt = make_optimizer("d-adam", K=K, eta=1e-2, period=1)
+        tr = DecentralizedTrainer(_loss, opt)
+        state = tr.init(_params())
+        it4, it2 = _batches(4), _batches(2)
+        state, log = tr.fit(state, it4, 2, log_every=1)
+        mb_k4 = log.comm_mb[0]
+        opt2 = make_optimizer("d-adam", K=2, eta=1e-2, period=1)
+        state = tr.resize(state, opt2)
+        state, log = tr.fit(state, it2, 2, log_every=1, log=log)
+        mb_k2 = log.comm_mb[-1] - log.comm_mb[-2]
+        # ring degree 2 at K=4 vs degree 2 at K=2 — bytes per round drop
+        # (K=2 ring has a single neighbor offset)
+        assert mb_k2 != mb_k4
+        assert log.comm_mb == sorted(log.comm_mb)
+        assert log.steps_total == 4
+
+    def test_fresh_log_callers_unchanged(self):
+        """Callers that pass no log still get per-call accounting
+        starting at zero (the pre-fix external-accumulation pattern)."""
+        tr, state = self._trainer()
+        it = _batches()
+        state, log_a = tr.fit(state, it, 4, log_every=4)
+        state, log_b = tr.fit(state, it, 4, log_every=4)
+        assert log_a.step == log_b.step == [4]
+        assert log_a.comm_mb == pytest.approx(log_b.comm_mb)
+
+
+# ------------------------------ error messages -------------------------------
+
+
+class TestErrorMessages:
+    def test_stack_params_missing_key(self):
+        with pytest.raises(ValueError, match="needs key="):
+            stack_params(_params(), 4, same_init=False,
+                         init_fn=lambda k: _params())
+
+    def test_stack_params_with_key_works(self):
+        out = stack_params(_params(), 3, same_init=False,
+                           key=jax.random.PRNGKey(1),
+                           init_fn=lambda k: {
+                               "w": jax.random.normal(k, (6, 2))})
+        assert out["w"].shape == (3, 6, 2)
+        assert not jnp.allclose(out["w"][0], out["w"][1])
+
+    def test_split_micro_names_leaf_and_suggests(self):
+        with pytest.raises(ValueError) as ei:
+            _split_micro({"inner": {"x": jnp.zeros((6, 3))}}, 4,
+                         batch_dim=0)
+        msg = str(ei.value)
+        assert "['inner']['x']" in msg
+        assert "nearest valid count is 3" in msg

@@ -1,0 +1,74 @@
+"""train/metrics: AUC (rank-based with tie midranks) and accuracy.
+
+The AUC pins matter because the CTR benchmark reports it as its quality
+metric: ties must get midranks (not first-seen ranks), a one-class batch
+must degrade to 0.5 rather than divide by zero, and the fast rank-based
+computation must agree with the naive O(n^2) pairwise definition
+P(score+ > score-) + 0.5 * P(tie) on random data.
+"""
+import numpy as np
+import pytest
+
+from repro.train.metrics import accuracy, auc
+
+
+def naive_auc(scores, labels):
+    """O(n^2) pairwise definition: wins + half-ties over all pos/neg
+    pairs."""
+    scores = np.asarray(scores, np.float64)
+    labels = np.asarray(labels)
+    pos = scores[labels == 1]
+    neg = scores[labels == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return 0.5
+    wins = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    return float((wins + 0.5 * ties) / (len(pos) * len(neg)))
+
+
+class TestAUC:
+    def test_perfect_ranking(self):
+        assert auc([0.1, 0.2, 0.8, 0.9], [0, 0, 1, 1]) == 1.0
+
+    def test_reversed_ranking(self):
+        assert auc([0.9, 0.8, 0.2, 0.1], [0, 0, 1, 1]) == 0.0
+
+    def test_random_is_half(self):
+        rng = np.random.default_rng(0)
+        scores = rng.random(4000)
+        labels = rng.integers(0, 2, 4000)
+        assert auc(scores, labels) == pytest.approx(0.5, abs=0.03)
+
+    def test_all_tied_scores_are_half(self):
+        assert auc([0.5, 0.5, 0.5, 0.5], [0, 1, 0, 1]) == 0.5
+
+    def test_tie_midranks(self):
+        # pos at 0.5 ties one neg (half credit), beats the 0.1 neg,
+        # loses to the 0.9 neg: (1 + 0.5) / 3
+        assert auc([0.1, 0.5, 0.5, 0.9],
+                   [0, 0, 1, 0]) == pytest.approx(1.5 / 3)
+
+    @pytest.mark.parametrize("labels", [[0, 0, 0, 0], [1, 1, 1, 1]])
+    def test_one_class_degrades_to_half(self, labels):
+        assert auc([0.1, 0.4, 0.6, 0.9], labels) == 0.5
+
+    def test_parity_with_naive_pairwise(self):
+        rng = np.random.default_rng(7)
+        for trial in range(20):
+            n = int(rng.integers(2, 60))
+            # coarse quantization forces plenty of ties
+            scores = rng.integers(0, 5, n) / 4.0
+            labels = rng.integers(0, 2, n)
+            assert auc(scores, labels) == pytest.approx(
+                naive_auc(scores, labels)), (trial, scores, labels)
+
+    def test_accepts_jax_arrays(self):
+        import jax.numpy as jnp
+
+        assert auc(jnp.array([0.1, 0.9]), jnp.array([0, 1])) == 1.0
+
+
+class TestAccuracy:
+    def test_argmax_match(self):
+        logits = np.array([[2.0, 1.0], [0.0, 3.0], [5.0, 0.0]])
+        assert accuracy(logits, np.array([0, 1, 1])) == pytest.approx(2 / 3)
