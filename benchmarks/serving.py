@@ -1,0 +1,182 @@
+"""Online-serving benchmark: bucketed batch decode + lock-free hot-swap.
+
+Three claims of the online train->serve design, one JSON record:
+
+* **batching wins** — decode QPS (requests/s) through the (8, P) bucket
+  must beat the (1, P) bucket: the batched step amortizes the weight
+  reads the paper's serverless replicas would otherwise each pay alone.
+* **swap is non-blocking** — per-call decode latency p99 while a trainer
+  publishes packed-state snapshots between calls must stay within 1.5x
+  the steady-state p99: the ParamStore pointer swap never stalls an
+  in-flight request.
+* **publish is unpack-once** — the HBM bytes a publish reads from the
+  packed-resident buffer (one ``(rows, 128)`` row block, or the K-row
+  mean) versus the full K-way unpack it replaces, from the same
+  accounting ``serve.publish.publish_hbm_bytes`` reports at runtime.
+
+Plus the serve-path invariant: the compiled single-token decode step
+contains ZERO collectives (``analysis.check.serve_decode_report``).
+
+Emits the usual CSV rows plus one ``JSON {...}`` stdout line and an
+optional ``--out`` artifact for CI (schema pinned by
+``tests/test_bench_smoke.py`` and the committed ``BENCH_<pr>.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+if __name__ == "__main__":
+    from repro.launch import env as _env
+    _env.setup()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.analysis.check import serve_decode_report
+from repro.configs import get_reduced
+from repro.core import make_optimizer
+from repro.data import lm_batch
+from repro.models import build_model
+from repro.serve import DecodeEngine, ParamStore, publish_from_state, \
+    publish_hbm_bytes
+from repro.train import DecentralizedTrainer
+
+K_TRAIN = 2  # packed trainer workers behind the swap phase
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def _decode_phase(engine, tokens, n_new, calls, *, on_call=None):
+    """Per-call wall times for ``calls`` generate_batch rounds; ``on_call``
+    (e.g. a publish) runs between timed calls, timed separately."""
+    times, extra = [], []
+    for i in range(calls):
+        if on_call is not None:
+            t0 = time.perf_counter()
+            on_call(i)
+            extra.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out = engine.generate_batch(tokens, n_new)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return times, extra
+
+
+def main(arch: str = "llama3.2-1b", prompt_len: int = 16,
+         new_tokens: int = 8, calls: int = 12, train_steps: int = 2,
+         out: str = "") -> dict:
+    cfg = get_reduced(arch).model
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+
+    # the trainer that feeds the swap phase: packed-resident D-Adam over
+    # the SAME LM params, so a publish exercises the unpack-once path
+    opt = make_optimizer("d-adam", K=K_TRAIN, eta=1e-4, period=2,
+                         backend="pallas")
+    trainer = DecentralizedTrainer(lambda p, b: api.loss(p, b), opt)
+    state = trainer.init(params)
+
+    def lm_iter(seed: int = 3, batch: int = 2):
+        key = jax.random.PRNGKey(seed)
+        t = 0
+        while True:
+            kt = jax.random.fold_in(key, t)
+            yield {"tokens": jnp.stack([
+                lm_batch(kt, batch, prompt_len, cfg.vocab_size, k,
+                         K_TRAIN, 0.5) for k in range(K_TRAIN)])}
+            t += 1
+
+    if train_steps:
+        state, _ = trainer.fit(state, lm_iter(), train_steps,
+                               log_every=train_steps)
+
+    store = ParamStore()
+    publish_from_state(store, state, mode="mean")
+    buckets = ((1, prompt_len), (8, prompt_len))
+    engine = DecodeEngine(cfg, store, buckets=buckets,
+                          max_new_tokens=new_tokens)
+    key = jax.random.PRNGKey(1)
+    toks1 = jax.random.randint(key, (1, prompt_len), 0, cfg.vocab_size)
+    toks8 = jax.random.randint(key, (8, prompt_len), 0, cfg.vocab_size)
+
+    # warm both buckets (compile once each), then measure
+    for toks in (toks1, toks8):
+        jax.block_until_ready(engine.generate_batch(toks, new_tokens))
+
+    t_single, _ = _decode_phase(engine, toks1, new_tokens, calls)
+    t_batched, _ = _decode_phase(engine, toks8, new_tokens, calls)
+    single_qps = calls / sum(t_single)
+    batched_qps = 8 * calls / sum(t_batched)
+
+    # swap phase: a publish from the live packed state between every call
+    t_swap, t_publish = _decode_phase(
+        engine, toks8, new_tokens, calls,
+        on_call=lambda i: publish_from_state(store, state, mode="mean"))
+    p99_steady = _pct(t_batched, 99)
+    p99_swap = _pct(t_swap, 99)
+    swap_ratio = p99_swap / p99_steady
+
+    hbm = {"worker": publish_hbm_bytes(state, mode="worker"),
+           "mean": publish_hbm_bytes(state, mode="mean")}
+    collectives = serve_decode_report(arch)
+
+    emit("serving/single_qps", sum(t_single) / calls * 1e6,
+         f"{single_qps:.2f}")
+    emit("serving/batched_qps", sum(t_batched) / calls * 1e6,
+         f"{batched_qps:.2f}")
+    emit("serving/p99_swap_over_steady", 0.0, f"{swap_ratio:.3f}")
+    emit("serving/publish_p50_ms", 0.0,
+         f"{_pct(t_publish, 50) * 1e3:.2f}")
+    emit("serving/decode_collectives_ok", 0.0, collectives.ok)
+
+    record = {
+        "benchmark": "serving",
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "arch": arch,
+        "buckets": [list(b) for b in engine.buckets],
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "calls": calls,
+        "compile_counts": engine.compile_counts,
+        "served_version": engine.last_version,
+        "single": {"qps": single_qps,
+                   "p50_s": _pct(t_single, 50),
+                   "p99_s": _pct(t_single, 99)},
+        "batched": {"qps": batched_qps,
+                    "p50_s": _pct(t_batched, 50),
+                    "p99_s": _pct(t_batched, 99)},
+        "batched_over_single": bool(batched_qps > single_qps),
+        "swap": {"p99_steady_s": p99_steady,
+                 "p99_during_swap_s": p99_swap,
+                 "ratio": swap_ratio,
+                 "publish_p50_s": _pct(t_publish, 50),
+                 "ratio_ok": bool(swap_ratio <= 1.5)},
+        "publish_hbm_bytes": hbm,
+        "decode_collectives_ok": bool(collectives.ok),
+    }
+    print("JSON " + json.dumps(record), flush=True)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--calls", type=int, default=12)
+    ap.add_argument("--train-steps", type=int, default=2)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    main(arch=args.arch, prompt_len=args.prompt_len,
+         new_tokens=args.new_tokens, calls=args.calls,
+         train_steps=args.train_steps, out=args.out)

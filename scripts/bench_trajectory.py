@@ -2,9 +2,9 @@
 """Generate the committed per-PR bench trajectory file ``BENCH_<n>.json``.
 
 One file per PR, committed at the repo root, holding the fused-step,
-heterogeneity, and damping records at the same smoke sizes the
+heterogeneity, damping, and serving records at the same smoke sizes the
 bench-smoke CI job runs (workers=4, size=8192, model_parallel=2;
-heterogeneity steps=60; damping steps=40). The CI
+heterogeneity steps=60; damping steps=40; serving calls=12). The CI
 job diffs the *schema* of its freshly produced records against the newest
 committed file (``benchmarks.common.schema_of``), so a field rename/drop/
 retype fails the push even though absolute CPU timings drift run to run.
@@ -38,10 +38,11 @@ def main(argv=None) -> int:
     ap.add_argument("--het-steps", type=int, default=60)
     ap.add_argument("--damp-steps", type=int, default=40)
     ap.add_argument("--damp-lm-steps", type=int, default=12)
+    ap.add_argument("--serve-calls", type=int, default=12)
     ns = ap.parse_args(argv)
 
     import jax
-    from benchmarks import damping, fused_step, heterogeneity
+    from benchmarks import damping, fused_step, heterogeneity, serving
 
     record = {
         "pr": ns.pr,
@@ -52,6 +53,7 @@ def main(argv=None) -> int:
         "heterogeneity": heterogeneity.main(steps=ns.het_steps),
         "damping": damping.main(steps=ns.damp_steps,
                                 lm_steps=ns.damp_lm_steps),
+        "serving": serving.main(calls=ns.serve_calls),
     }
     out = os.path.abspath(os.path.join(_ROOT, f"BENCH_{ns.pr}.json"))
     with open(out, "w") as fh:

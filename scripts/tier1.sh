@@ -37,7 +37,7 @@ if python -c "import xdist" >/dev/null 2>&1; then
   XDIST_ARGS=(-n auto --max-worker-restart 0 -p no:cacheprovider)
 fi
 
-# Doctests of the documented public API. Scoped to the eight modules
+# Doctests of the documented public API. Scoped to the nine modules
 # with runnable examples — --doctest-modules over all of src/ would
 # import every module (some gate on devices/deps) and execute every
 # stray example. set -e aborts the run if any example drifted.
@@ -49,6 +49,7 @@ python -m pytest -q --doctest-modules \
   src/repro/train/grad.py \
   src/repro/train/damping.py \
   src/repro/checkpoint/io.py \
-  src/repro/analysis/invariants.py
+  src/repro/analysis/invariants.py \
+  src/repro/serve/publish.py
 
 exec python -m pytest -x -q "${XDIST_ARGS[@]}" "$@"

@@ -275,6 +275,36 @@ def topology_reports() -> List[InvariantReport]:
     return reports
 
 
+# ----------------------------- serve path ------------------------------------
+
+
+def serve_decode_report(arch: str = "llama3.2-1b") -> InvariantReport:
+    """The serving-side gate: one compiled single-token decode step must
+    contain ZERO collectives of any kind. Serving replicas are
+    independent — a collective sneaking into the decode path (e.g. a
+    sharding constraint leaking from the training mesh through a
+    published param) would stall every replica on its slowest peer."""
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serve.engine import kv_cache_len
+
+    cfg = get_reduced(arch).model
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((4, 8), jnp.int32)
+    _, cache = api.prefill(params, {"tokens": toks},
+                           cache_len=kv_cache_len(cfg, 16))
+    tok = jnp.zeros((4,), jnp.int32)
+    hlo = jax.jit(api.decode_step).lower(params, cache,
+                                         tok).compile().as_text()
+    spec = InvariantSpec(
+        name=f"serve.decode[{arch}]",
+        collective_counts={k: 0 for k in
+                           ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")})
+    return evaluate_hlo(hlo, spec)
+
+
 # ---------------------------- known-bug corpus -------------------------------
 
 
@@ -415,6 +445,15 @@ def run(backends: Sequence[str] = BACKENDS,
             log(report.format(verbose=False))
     log("[ok  ] topology zoo + schedule entries (INV006/INV007)"
         if ok else "[    ] topology zoo checked")
+
+    serve_rep = serve_decode_report()
+    if not serve_rep.ok:
+        ok = False
+        for c in serve_rep.failures:
+            rule_counts[c.rule] = rule_counts.get(c.rule, 0) + 1
+        log(serve_rep.format(verbose=False))
+    log(("[ok  ] " if serve_rep.ok else "[FAIL] ")
+        + "serve decode step: zero collectives")
 
     if corpus:
         corpus_ok, lines = run_corpus()

@@ -1,7 +1,8 @@
+from repro.data.stream import ctr_stream, prefetch_to_device
 from repro.data.synthetic import (CTRTask, ctr_batch, ctr_batch_stacked,
                                   image_batch, image_batch_stacked, lm_batch,
                                   lm_batches_stacked, make_ctr_task)
 
 __all__ = ["CTRTask", "make_ctr_task", "ctr_batch", "ctr_batch_stacked",
            "lm_batch", "lm_batches_stacked", "image_batch",
-           "image_batch_stacked"]
+           "image_batch_stacked", "ctr_stream", "prefetch_to_device"]

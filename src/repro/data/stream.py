@@ -1,0 +1,81 @@
+"""Device-prefetched streaming batches for online training and serving.
+
+``prefetch_to_device`` is a double-buffered host→device pipeline:
+``jax.device_put`` is asynchronous, so keeping ``size`` batches in flight
+overlaps the next batches' host→device copies (and any host-side batch
+synthesis) with the compute consuming the current one. ``ctr_stream`` is
+the endless non-IID CTR stream the online train→serve loop and the
+serving benchmark draw from — deterministic in ``(seed, step)``.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Iterator, Optional
+
+import jax
+
+from repro.data.synthetic import CTRTask, ctr_batch_stacked
+
+PyTree = Any
+
+
+def prefetch_to_device(it: Iterator[PyTree], size: int = 2, *,
+                       sharding: Optional[Any] = None,
+                       placer: Optional[Any] = None) -> Iterator[PyTree]:
+    """Wrap a host batch iterator with an async device-transfer window.
+
+    Pulls up to ``size`` batches ahead of the consumer and issues their
+    ``jax.device_put`` immediately — the copies (and the host-side work
+    of producing the next batches) run while the consumer computes on the
+    current one. ``size=2`` is classic double buffering: one batch in
+    use, one in flight.
+
+    Args:
+      it: host-side batch iterator (finite or endless).
+      size: transfer window depth (>= 1).
+      sharding: optional target sharding forwarded to ``device_put``
+        (e.g. a worker-axis ``NamedSharding`` for comm='axis' batches).
+      placer: alternative to ``sharding`` — a callable ``batch ->
+        placed_batch`` (e.g. the trainer's ``_place_batch``); wins when
+        both are given.
+
+    Yields:
+      The batches of ``it``, in order, already on device.
+    """
+    if size < 1:
+        raise ValueError(f"prefetch size must be >= 1, got {size}")
+
+    def put(batch: PyTree) -> PyTree:
+        if placer is not None:
+            return placer(batch)
+        if sharding is not None:
+            return jax.device_put(batch, sharding)
+        return jax.device_put(batch)
+
+    window: collections.deque = collections.deque()
+    it = iter(it)
+    try:
+        while len(window) < size:
+            window.append(put(next(it)))
+    except StopIteration:
+        pass
+    while window:
+        batch = window.popleft()
+        try:
+            window.append(put(next(it)))
+        except StopIteration:
+            pass
+        yield batch
+
+
+def ctr_stream(task: CTRTask, K: int, per_worker: int, *, seed: int = 1,
+               skew: float = 0.5) -> Iterator[PyTree]:
+    """Endless stacked non-IID CTR batches, deterministic in
+    ``(seed, step)`` — step ``t`` is ``ctr_batch_stacked`` under
+    ``fold_in(PRNGKey(seed), t)`` regardless of prefetch depth."""
+    key = jax.random.PRNGKey(seed)
+    t = 0
+    while True:
+        yield ctr_batch_stacked(task, jax.random.fold_in(key, t), K,
+                                per_worker, skew)
+        t += 1

@@ -316,6 +316,72 @@ def pack(tree: PyTree, spec: PackSpec, dtype: Any = None) -> jax.Array:
     return flat.reshape(spec.rows, LANE)
 
 
+def _unpack_one_row(row: jax.Array, spec: PackSpec) -> PyTree:
+    """Decode ONE worker row — a ``(rows, LANE)`` slice of a stacked
+    buffer — into the per-worker param pytree (leaf shapes without the
+    leading K dim). Shared by :func:`unpack_worker` / :func:`unpack_mean`."""
+    per_worker = tuple(s[1:] for s in spec.shapes)
+    if spec.row_shards > 1:
+        flat = row.reshape(spec.row_shards, -1)
+        leaves = [
+            flat[:, o:o + c].reshape(-1)[:sz].astype(dt).reshape(shape)
+            for o, c, sz, dt, shape in zip(spec.offsets,
+                                           _shard_chunks(spec),
+                                           spec.sizes, spec.dtypes,
+                                           per_worker)
+        ]
+    else:
+        flat = row.reshape(-1)
+        leaves = [
+            flat[o:o + sz].astype(dt).reshape(shape)
+            for o, sz, dt, shape in zip(spec.offsets, spec.sizes,
+                                        spec.dtypes, per_worker)
+        ]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def unpack_worker(buf: jax.Array, spec: PackSpec, k: int) -> PyTree:
+    """Worker ``k``'s param pytree straight from the stacked buffer.
+
+    The unpack-once publish path: materializes ONE worker's per-worker
+    tree (leaf shapes WITHOUT the leading K dim) by slicing its
+    ``(rows, LANE)`` row block — reading 1/K of the buffer — instead of
+    the full K-way :func:`unpack` followed by a per-worker slice.
+    Handles both the leaf-aligned and the row-sharded (``row_shards=M``)
+    resident layouts; under GSPMD a sharded buffer contributes only the
+    addressed worker's shards.
+    """
+    if not spec.stacked:
+        raise ValueError("unpack_worker needs a stacked spec")
+    k = int(k)
+    if not 0 <= k < spec.k:
+        raise ValueError(f"worker index {k} out of range for K={spec.k}")
+    if buf.shape != spec.buf_shape():
+        raise ValueError(
+            f"buffer shape {tuple(buf.shape)} does not match spec "
+            f"{spec.buf_shape()}")
+    return _unpack_one_row(buf[k], spec)
+
+
+def unpack_mean(buf: jax.Array, spec: PackSpec) -> PyTree:
+    """The consensus-mean param pytree straight from the stacked buffer.
+
+    Reduces the worker dim IN THE PACKED DOMAIN (one ``(rows, LANE)``
+    mean buffer, computed in the buffer's storage dtype — the widest
+    participating float) and decodes that single row block, so exactly
+    one per-worker tree is materialized. Bit-identical to
+    ``mean_params(unpack(buf, spec))`` for f32 trees, without unpacking
+    K per-worker copies first.
+    """
+    if not spec.stacked:
+        raise ValueError("unpack_mean needs a stacked spec")
+    if buf.shape != spec.buf_shape():
+        raise ValueError(
+            f"buffer shape {tuple(buf.shape)} does not match spec "
+            f"{spec.buf_shape()}")
+    return _unpack_one_row(jnp.mean(buf, axis=0), spec)
+
+
 def unpack(buf: jax.Array, spec: PackSpec) -> PyTree:
     """Exact inverse of ``pack``: strip padding, split, restore per-leaf
     shape and dtype."""

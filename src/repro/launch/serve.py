@@ -1,11 +1,14 @@
-"""Serving driver: batched greedy generation for any registered arch.
+"""Serving driver: bucketed batch decode through the DecodeEngine.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
-        --batch 4 --prompt-len 32 --new-tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --buckets 1x32,8x32 --new-tokens 32
 
-Uses the reduced config on CPU (--full for real hardware). Reports
-prefill latency, per-token decode latency and tokens/s — the serving-side
-counterpart of launch/train.py.
+Uses the reduced config on CPU (--full for real hardware). Params are
+served from a ParamStore behind the lock-free version pointer, prompts are
+grouped into the compiled (batch, seq) bucket set, and the compile cache
+is pinned at the bucket count — a bucket escape raises instead of silently
+recompiling. Reports prefill latency, per-token decode latency, tokens/s
+and the compile counts — the serving-side counterpart of launch/train.py.
 """
 from __future__ import annotations
 
@@ -22,58 +25,87 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, get_reduced, list_archs
 from repro.models import build_model
-from repro.serve.engine import kv_cache_len
+from repro.serve import DecodeEngine, ParamStore, select_bucket
+
+
+def parse_buckets(spec: str):
+    """``"1x32,8x32"`` -> ((1, 32), (8, 32))."""
+    out = []
+    for part in spec.split(","):
+        b, s = part.lower().split("x")
+        out.append((int(b), int(s)))
+    return tuple(out)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--buckets", default="1x32,8x32",
+                    help="comma-separated batchxseq compile buckets")
+    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=[None, "bfloat16", "float32"],
+                    help="KV-cache storage dtype (default: prefill dtype)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch) if args.full else get_reduced(args.arch)
     cfg = arch.model
     api = build_model(cfg)
-    params = api.init(jax.random.PRNGKey(0))
+    store = ParamStore()
+    store.publish(api.init(jax.random.PRNGKey(0)))
+
+    cache_dtype = (None if args.cache_dtype is None
+                   else jnp.dtype(args.cache_dtype))
+    engine = DecodeEngine(cfg, store, buckets=parse_buckets(args.buckets),
+                          max_new_tokens=args.new_tokens,
+                          cache_dtype=cache_dtype)
+    # pad the request into the tightest compiled bucket: seq right-padded
+    # (true_len drives the exact rewind+re-feed path), batch filled by
+    # replicating row 0, real rows sliced back out below
+    B, S = select_bucket(engine.buckets, args.batch, args.prompt_len,
+                         pad_seq=engine.pad_seq)
+    if args.batch > B:
+        raise SystemExit(
+            f"--batch {args.batch} exceeds the largest bucket batch {B}; "
+            f"add a bigger bucket to --buckets (got {args.buckets})")
     key = jax.random.PRNGKey(1)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    tokens = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    tokens = jnp.pad(tokens, ((0, B - args.batch),
+                              (0, S - args.prompt_len)))
+    extras = {}
     if cfg.family == "vlm":
-        batch["patches"] = jax.random.normal(
-            key, (args.batch, cfg.n_patches, 1024))
+        extras["patches"] = jax.random.normal(
+            key, (B, cfg.n_patches, 1024))
     if cfg.family == "audio":
-        batch["audio_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.n_audio_ctx, cfg.d_model))
-
-    extra = cfg.n_patches if cfg.family == "vlm" else 0
-    cache_len = kv_cache_len(cfg, args.prompt_len + extra + args.new_tokens)
+        extras["audio_embeds"] = jax.random.normal(
+            key, (B, cfg.n_audio_ctx, cfg.d_model))
 
     t0 = time.perf_counter()
-    logits, cache = api.prefill(params, batch, cache_len=cache_len)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    out = engine.generate_batch(tokens, args.new_tokens,
+                                true_len=args.prompt_len,
+                                extras=extras or None)
+    jax.block_until_ready(out)
+    t_warm = time.perf_counter() - t0
 
-    step = jax.jit(api.decode_step)
-    tok = jnp.argmax(logits[:, -1, :] if logits.ndim == 3 else logits,
-                     axis=-1).astype(jnp.int32)
-    out = [tok]
     t0 = time.perf_counter()
-    for _ in range(args.new_tokens - 1):
-        logits, cache = step(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    out = engine.generate_batch(tokens, args.new_tokens,
+                                true_len=args.prompt_len,
+                                extras=extras or None)
+    jax.block_until_ready(out)
+    t_steady = time.perf_counter() - t0
 
-    total = args.batch * args.new_tokens
+    out = out[:args.batch]
+    total = out.size
     print(f"[serve] {args.arch} ({'full' if args.full else 'reduced'}) "
-          f"batch={args.batch} prompt={args.prompt_len}")
-    print(f"[serve] prefill {t_prefill * 1e3:.0f} ms | decode "
-          f"{t_decode / max(args.new_tokens - 1, 1) * 1e3:.1f} ms/tok | "
-          f"{total / (t_prefill + t_decode):.1f} tok/s")
+          f"batch={args.batch} prompt={args.prompt_len} "
+          f"buckets={engine.buckets} v{engine.last_version}")
+    print(f"[serve] warm {t_warm * 1e3:.0f} ms | steady "
+          f"{t_steady / args.new_tokens * 1e3:.1f} ms/tok | "
+          f"{total / t_steady:.1f} tok/s | compiles {engine.compile_counts}")
 
 
 if __name__ == "__main__":

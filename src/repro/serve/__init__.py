@@ -1,6 +1,11 @@
-from repro.serve.engine import (cache_spec, effective_config,
-                                greedy_generate, make_prefill_step,
-                                make_serve_step)
+from repro.serve.engine import (DecodeEngine, cache_spec, cast_cache,
+                                effective_config, greedy_generate,
+                                make_prefill_step, make_serve_step,
+                                select_bucket)
+from repro.serve.publish import (ParamStore, publish_from_state,
+                                 publish_hbm_bytes, publish_params)
 
 __all__ = ["cache_spec", "effective_config", "make_serve_step",
-           "make_prefill_step", "greedy_generate"]
+           "make_prefill_step", "greedy_generate", "DecodeEngine",
+           "cast_cache", "select_bucket", "ParamStore", "publish_params",
+           "publish_from_state", "publish_hbm_bytes"]

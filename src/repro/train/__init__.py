@@ -2,8 +2,10 @@ from repro.train.damping import DampingConfig, DampingState, make_damping
 from repro.train.grad import (GradPipeline, ShardCtx, make_grad_pipeline,
                               make_worker_grad, row_parallel_dot)
 from repro.train.loop import DecentralizedTrainer, TrainLog, stack_params
+from repro.train.online import OnlineResult, train_online
 
 __all__ = ["DecentralizedTrainer", "TrainLog", "stack_params",
            "GradPipeline", "ShardCtx", "make_grad_pipeline",
            "make_worker_grad", "row_parallel_dot",
-           "DampingConfig", "DampingState", "make_damping"]
+           "DampingConfig", "DampingState", "make_damping",
+           "OnlineResult", "train_online"]

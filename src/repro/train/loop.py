@@ -275,8 +275,9 @@ class DecentralizedTrainer:
                 eta=float(self.opt.cfg.eta) * factor))
 
     def fit(self, state, batch_iter: Iterator[PyTree], steps: int, *,
-            log_every: int = 50, log: Optional[TrainLog] = None) -> Tuple[
-                Any, TrainLog]:
+            log_every: int = 50, log: Optional[TrainLog] = None,
+            hook: Optional[Callable[[int, Any], None]] = None,
+            hook_every: int = 0) -> Tuple[Any, TrainLog]:
         """Run ``steps`` optimizer steps, logging every ``log_every``.
 
         Pass the previous call's ``log`` back in to CONTINUE it: the
@@ -284,7 +285,15 @@ class DecentralizedTrainer:
         ``log.step`` / ``log.comm_mb`` / ``log.wall_s`` resume instead of
         restarting at zero, and under a ``TopologySchedule`` the
         schedule-entry round index stays aligned across calls (a fresh
-        log restarts the entry accounting at the cycle head)."""
+        log restarts the entry accounting at the cycle head).
+
+        ``hook(global_step, state)`` is called every ``hook_every`` steps
+        (cumulative step count, aligned with ``log.step``) — the online
+        train→serve publish point (``train.online`` installs a
+        ``ParamStore`` publish here). The hook runs on the host between
+        jitted steps: it must not mutate ``state``, and anything it
+        launches (a ``device_put``, an unpack-once publish) is async, so
+        training does not stall on it."""
         log = log or TrainLog()
         comm_rounds = log.comm_rounds_total
         comm_mb = log.comm_mb_total
@@ -310,6 +319,9 @@ class DecentralizedTrainer:
             if (t + 1) % self.opt.cfg.period == 0:
                 comm_mb += self._round_mb(state, comm_rounds)
                 comm_rounds += 1
+            if hook is not None and hook_every > 0 \
+                    and (t + 1) % hook_every == 0:
+                hook(step0 + t + 1, state)
             if (t + 1) % log_every == 0 or t == steps - 1:
                 if self._damping is not None:
                     evals = (log.grad_evals_total

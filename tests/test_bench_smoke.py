@@ -207,6 +207,56 @@ def test_damping_smoke(tmp_path, capsys):
     assert json.loads(json_lines[0][5:])["benchmark"] == "damping"
 
 
+def test_serving_smoke(tmp_path, capsys):
+    """The serving benchmark must keep producing its record schema AND
+    its headline claims at smoke size: batched decode QPS beats
+    single-request QPS, the compile cache is pinned at the bucket-set
+    size, and the compiled decode step carries zero collectives."""
+    from benchmarks import serving
+
+    out = tmp_path / "serve.json"
+    record = serving.main(calls=4, train_steps=1, out=str(out))
+
+    assert record["benchmark"] == "serving"
+    assert record["jax_version"] == jax.__version__
+    assert record["arch"] == "llama3.2-1b"
+    # compile-once cache pinned at the bucket-set size (the engine's
+    # RecompileWatch would have raised on an escape before we got here)
+    n_buckets = len(record["buckets"])
+    assert record["compile_counts"] == {"prefill": n_buckets,
+                                        "decode": n_buckets}
+    # the batching acceptance pin: QPS through the (8, P) bucket strictly
+    # above the (1, P) bucket
+    assert record["batched"]["qps"] > record["single"]["qps"]
+    assert record["batched_over_single"] is True
+    for side in ("single", "batched"):
+        assert record[side]["p50_s"] > 0
+        assert record[side]["p99_s"] >= record[side]["p50_s"]
+    # swap-phase fields present with real numbers (the <=1.5x latency
+    # gate itself is asserted on the committed BENCH record, where the
+    # full-size run is less noise-bound than this 4-call smoke)
+    for key in ("p99_steady_s", "p99_during_swap_s", "ratio",
+                "publish_p50_s"):
+        assert record["swap"][key] > 0
+    assert isinstance(record["swap"]["ratio_ok"], bool)
+    # unpack-once accounting: a publish reads strictly less than the full
+    # K-way unpack it replaces (worker mode reads 1/K of the buffer)
+    hbm = record["publish_hbm_bytes"]
+    assert hbm["worker"]["read_bytes"] * serving.K_TRAIN == \
+        hbm["worker"]["full_unpack_read_bytes"]
+    assert hbm["worker"]["read_bytes"] < \
+        hbm["worker"]["full_unpack_read_bytes"]
+    assert hbm["mean"]["write_bytes"] < \
+        hbm["mean"]["full_unpack_write_bytes"]
+    assert record["decode_collectives_ok"] is True
+
+    assert json.loads(out.read_text()) == record
+    stdout = capsys.readouterr().out
+    json_lines = [ln for ln in stdout.splitlines() if ln.startswith("JSON ")]
+    assert len(json_lines) == 1
+    assert json.loads(json_lines[0][5:])["benchmark"] == "serving"
+
+
 # ----------------------- committed bench trajectory --------------------------
 
 
@@ -231,8 +281,13 @@ def test_bench_trajectory_committed_and_schema_stable():
         "no committed BENCH_<pr>.json; run scripts/bench_trajectory.py"
     committed = json.loads(path.read_text())
     assert {"pr", "jax_version", "fused_step", "heterogeneity",
-            "damping"} <= set(committed)
+            "damping", "serving"} <= set(committed)
     assert committed["pr"] == int(path.stem.split("_")[1])
+    # the online-serving acceptance gates hold in the committed record:
+    # batching wins and the hot-swap never costs more than 1.5x p99
+    assert committed["serving"]["batched_over_single"] is True
+    assert committed["serving"]["swap"]["ratio_ok"] is True
+    assert committed["serving"]["decode_collectives_ok"] is True
 
     if jax.device_count() < 4:
         pytest.skip("schema comparison needs >= 4 devices so the fresh "
@@ -252,3 +307,8 @@ def test_bench_trajectory_committed_and_schema_stable():
     fresh_damp = damping.main(steps=6, lm_steps=2)
     assert schema_of(fresh_damp) == schema_of(committed["damping"]), \
         "damping record schema drifted from the committed trajectory"
+
+    from benchmarks import serving
+    fresh_serve = serving.main(calls=4, train_steps=1)
+    assert schema_of(fresh_serve) == schema_of(committed["serving"]), \
+        "serving record schema drifted from the committed trajectory"

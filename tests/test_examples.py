@@ -35,6 +35,24 @@ def test_quickstart_runs():
     assert "final averaged-model params ready" in res.stdout
 
 
+def test_serve_lm_runs():
+    res = run_example("serve_lm.py", env_extra={"SERVE_NEW_TOKENS": "4"})
+    assert res.returncode == 0, res.stderr[-2000:]
+    # both serving rounds print their ParamStore version — the second
+    # after the hot-swap (the script asserts version 2 itself)
+    assert "v1:" in res.stdout
+    assert "v2: re-served after hot-swap" in res.stdout
+
+
+def test_online_serve_runs():
+    res = run_example("online_serve.py", "--steps", "4",
+                      "--publish-every", "2")
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "published versions: [1, 2]" in res.stdout
+    assert "serving v2:" in res.stdout
+    assert "AUC=" in res.stdout
+
+
 def test_deepfm_ctr_runs():
     res = run_example("deepfm_ctr.py", "--steps", "4")
     assert res.returncode == 0, res.stderr[-2000:]

@@ -1,0 +1,252 @@
+"""Batched decode engine invariants (``serve.engine.DecodeEngine``).
+
+Pins the padded-bucket exactness contract and the compile-cache economy:
+
+* engine output through a bucket is BITWISE equal to the unbatched
+  ``greedy_generate`` reference — for exact-length prompts, seq-padded
+  prompts (the rewind + re-feed path), and batch-padded request lists,
+* the compile cache holds exactly one prefill + one decode program per
+  bucket, and a shape that escapes the bucket set raises,
+* a bf16 KV cache stays within logits tolerance of the f32 cache and
+  never changes dtype discipline (upcasts are rejected),
+* hot-swap: a ``ParamStore`` publish between calls is picked up by the
+  very next call with no recompilation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve import DecodeEngine, ParamStore, cast_cache, \
+    greedy_generate, select_bucket
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_reduced("llama3.2-1b").model
+    api = build_model(cfg)
+    params = api.init(KEY)
+    return cfg, api, params
+
+
+def prompts_of(lengths, vocab, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.randint(jax.random.fold_in(key, i), (L,), 0, vocab)
+            for i, L in enumerate(lengths)]
+
+
+# ------------------------------ exactness -----------------------------------
+
+
+class TestExactness:
+    def test_exact_seq_matches_greedy_generate(self, lm):
+        cfg, api, params = lm
+        toks = jax.random.randint(KEY, (4, 16), 0, cfg.vocab_size)
+        eng = DecodeEngine(cfg, params, buckets=((4, 16),),
+                           max_new_tokens=8)
+        ref = greedy_generate(cfg, params, {"tokens": toks}, 8,
+                              cache_len=eng.cache_len_for(16))
+        np.testing.assert_array_equal(
+            np.asarray(eng.generate_batch(toks, 8)), np.asarray(ref))
+
+    def test_seq_padded_prompt_is_exact(self, lm):
+        """The rewind + re-feed path: a 13-token prompt through a (2, 16)
+        bucket must produce the SAME tokens as serving it unpadded."""
+        cfg, api, params = lm
+        toks = jax.random.randint(KEY, (2, 13), 0, cfg.vocab_size)
+        eng = DecodeEngine(cfg, params, buckets=((2, 16),),
+                           max_new_tokens=8)
+        padded = jnp.pad(toks, ((0, 0), (0, 3)))
+        ref = greedy_generate(cfg, params, {"tokens": toks}, 8,
+                              cache_len=eng.cache_len_for(16))
+        np.testing.assert_array_equal(
+            np.asarray(eng.generate_batch(padded, 8, true_len=13)),
+            np.asarray(ref))
+
+    def test_generate_groups_and_drops_batch_padding(self, lm):
+        """Ragged request list: per-request outputs equal the per-request
+        unbatched reference — batch-pad rows never leak out."""
+        cfg, api, params = lm
+        lengths = (16, 9, 16, 12, 16)
+        prompts = prompts_of(lengths, cfg.vocab_size)
+        eng = DecodeEngine(cfg, params, buckets=((1, 16), (4, 16)),
+                           max_new_tokens=6)
+        outs = eng.generate(prompts, 6)
+        assert len(outs) == len(prompts)
+        for p, out in zip(prompts, outs):
+            ref = greedy_generate(cfg, params, {"tokens": p[None]}, 6,
+                                  cache_len=eng.cache_len_for(16))
+            np.testing.assert_array_equal(np.asarray(out),
+                                          np.asarray(ref[0]))
+
+    def test_n_new_zero(self, lm):
+        cfg, api, params = lm
+        toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+        eng = DecodeEngine(cfg, params, buckets=((1, 16),))
+        assert eng.generate_batch(toks, 0).shape == (1, 0)
+
+
+# --------------------------- compile-cache economy ---------------------------
+
+
+class TestCompileCache:
+    def test_one_program_per_bucket(self, lm):
+        cfg, api, params = lm
+        eng = DecodeEngine(cfg, params, buckets=((1, 16), (4, 16)),
+                           max_new_tokens=4)
+        for B in (1, 4, 1, 4):
+            toks = jax.random.randint(KEY, (B, 16), 0, cfg.vocab_size)
+            eng.generate_batch(toks, 4)
+        assert eng.compile_counts == {"prefill": 2, "decode": 2}
+
+    def test_bucket_escape_raises(self, lm):
+        cfg, api, params = lm
+        eng = DecodeEngine(cfg, params, buckets=((1, 16),))
+        with pytest.raises(ValueError, match="bucket"):
+            eng.generate_batch(
+                jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size), 2)
+
+    def test_select_bucket(self):
+        buckets = ((1, 16), (4, 16), (8, 32))
+        assert select_bucket(buckets, 3, 10) == (4, 16)
+        assert select_bucket(buckets, 1, 16) == (1, 16)
+        assert select_bucket(buckets, 8, 20) == (8, 32)
+        # oversized batch: biggest fitting bucket (caller splits)
+        assert select_bucket(buckets, 9, 16) == (4, 16)
+        with pytest.raises(ValueError, match="bucket"):
+            select_bucket(buckets, 1, 64)
+        # pad_seq off: only exact seq matches qualify
+        with pytest.raises(ValueError, match="bucket"):
+            select_bucket(buckets, 1, 10, pad_seq=False)
+
+
+# ------------------------------ KV-cache dtype -------------------------------
+
+
+class TestCacheDtype:
+    def test_bf16_cache_logits_parity(self, lm):
+        """Satellite pin: bf16 KV storage under f32 compute stays within
+        tolerance of the f32 cache on the same decode step."""
+        cfg, _, _ = lm
+        cfg32 = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+        api = build_model(cfg32)
+        params = api.init(KEY)
+        toks = jax.random.randint(KEY, (2, 12), 0, cfg32.vocab_size)
+        _, cache = api.prefill(params, {"tokens": toks}, cache_len=20)
+        tok = jnp.zeros((2,), jnp.int32)
+        l_f32, _ = api.decode_step(params, cache, tok)
+        l_bf16, _ = api.decode_step(params, cast_cache(cache, jnp.bfloat16),
+                                    tok)
+        assert l_f32.dtype == l_bf16.dtype
+        np.testing.assert_allclose(np.asarray(l_f32), np.asarray(l_bf16),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_bf16_cache_end_to_end(self, lm):
+        cfg, _, _ = lm
+        cfg32 = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+        api = build_model(cfg32)
+        params = api.init(KEY)
+        toks = jax.random.randint(KEY, (2, 12), 0, cfg32.vocab_size)
+        eng = DecodeEngine(cfg32, params, buckets=((2, 12),),
+                           max_new_tokens=4, cache_dtype=jnp.bfloat16)
+        out = eng.generate_batch(toks, 4)
+        assert out.shape == (2, 4) and out.dtype == jnp.int32
+
+    def test_upcast_cache_dtype_rejected(self, lm):
+        cfg, api, params = lm
+        assert jnp.dtype(cfg.compute_dtype) == jnp.bfloat16
+        with pytest.raises(ValueError, match="wider"):
+            DecodeEngine(cfg, params, cache_dtype=jnp.float32)
+
+    def test_cast_cache_preserves_integer_leaves(self, lm):
+        cfg, api, params = lm
+        toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+        _, cache = api.prefill(params, {"tokens": toks}, cache_len=12)
+        cast = cast_cache(cache, jnp.bfloat16)
+        assert cast.index.dtype == cache.index.dtype
+        assert cast.k.dtype == jnp.bfloat16
+
+
+# -------------------------------- hot-swap -----------------------------------
+
+
+class TestHotSwap:
+    def test_version_pickup_without_recompile(self, lm):
+        cfg, api, params = lm
+        store = ParamStore()
+        store.publish(params)
+        eng = DecodeEngine(cfg, store, buckets=((2, 16),),
+                           max_new_tokens=4)
+        toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        out1 = eng.generate_batch(toks, 4)
+        assert eng.last_version == 1
+
+        store.publish(api.init(jax.random.PRNGKey(7)))
+        out2 = eng.generate_batch(toks, 4)
+        assert eng.last_version == 2
+        # new params actually served (same shapes, different values)
+        assert not np.array_equal(np.asarray(out1), np.asarray(out2))
+        # and the swap cost zero new programs
+        assert eng.compile_counts == {"prefill": 1, "decode": 1}
+
+    def test_plain_pytree_source_serves_version_zero(self, lm):
+        cfg, api, params = lm
+        eng = DecodeEngine(cfg, params, buckets=((1, 16),),
+                           max_new_tokens=2)
+        eng.generate_batch(
+            jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size), 2)
+        assert eng.last_version == 0
+
+
+# ------------------------------- validation ----------------------------------
+
+
+class TestValidation:
+    def test_empty_buckets_rejected(self, lm):
+        cfg, api, params = lm
+        with pytest.raises(ValueError, match="bucket"):
+            DecodeEngine(cfg, params, buckets=())
+
+    def test_true_len_out_of_range(self, lm):
+        cfg, api, params = lm
+        eng = DecodeEngine(cfg, params, buckets=((1, 16),))
+        toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+        with pytest.raises(ValueError, match="true_len"):
+            eng.generate_batch(toks, 2, true_len=17)
+        with pytest.raises(ValueError, match="true_len"):
+            eng.generate_batch(toks, 2, true_len=0)
+
+    def test_n_new_beyond_headroom_rejected(self, lm):
+        cfg, api, params = lm
+        eng = DecodeEngine(cfg, params, buckets=((1, 16),),
+                           max_new_tokens=4)
+        toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.generate_batch(toks, 5)
+
+    def test_seq_padding_rejected_for_rotating_cache(self, lm):
+        """A sliding-window config folds pad tokens into its rotating
+        cache — the engine must refuse true_len < seq instead of serving
+        silently wrong tokens."""
+        cfg, _, _ = lm
+        cfg_sw = dataclasses.replace(cfg, sliding_window=8)
+        api = build_model(cfg_sw)
+        params = api.init(KEY)
+        eng = DecodeEngine(cfg_sw, params, buckets=((1, 16),),
+                           max_new_tokens=2)
+        assert eng.pad_seq is False
+        toks = jax.random.randint(KEY, (1, 16), 0, cfg_sw.vocab_size)
+        with pytest.raises(ValueError, match="pad_seq"):
+            eng.generate_batch(toks, 2, true_len=10)
+
+    def test_2d_prompts_rejected_by_generate(self, lm):
+        cfg, api, params = lm
+        eng = DecodeEngine(cfg, params, buckets=((1, 16),))
+        with pytest.raises(ValueError, match="1-D"):
+            eng.generate([jnp.zeros((1, 16), jnp.int32)], 2)
